@@ -1,0 +1,42 @@
+"""Beyond-paper ablation: SWAP quality vs worker count W (the paper fixes
+W=8 for CIFAR and W=2 for ImageNet; here we sweep W at a fixed total
+phase-2 sample budget to see where the averaging benefit saturates)."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import cnn_task, mean_std, run_swap
+
+BASE = dict(b1=512, b2=64, steps1=120, steps2=96, lr1=1.2, lr2=0.15,
+            stop_acc=0.93)
+
+
+def run(seeds=(0, 1), verbose=True):
+    rows = {}
+    for W in (1, 2, 4, 8):
+        accs_b, accs_a = [], []
+        for seed in seeds:
+            adapter, train, test_loader = cnn_task(seed=seed, noise=3.5)
+            s = run_swap(adapter, train, test_loader, workers=W, seed=seed,
+                         **BASE)
+            accs_b.append(s["before_avg_test_acc"])
+            accs_a.append(s["after_avg_test_acc"])
+        rows[W] = {"before": accs_b, "after": accs_a}
+    if verbose:
+        print("\n== Ablation: SWAP vs worker count ==")
+        print(f"{'W':>3s} {'before avg':>18s} {'after avg':>18s} {'gain':>8s}")
+        for W, v in rows.items():
+            gain = (sum(v["after"]) - sum(v["before"])) / len(v["after"])
+            print(f"{W:3d} {mean_std(v['before']):>18s} "
+                  f"{mean_std(v['after']):>18s} {gain:+8.4f}")
+    return rows
+
+
+def main():
+    out = run()
+    with open("results/ablation_workers.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

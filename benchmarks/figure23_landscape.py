@@ -1,0 +1,121 @@
+"""Figures 2/3 analog: train/test error on the 2-D plane spanned by the
+phase-1 output ('LB'), one phase-2 worker ('SGD'), and the averaged model
+('SWAP'). The paper's observation: LB and the workers sit on the EDGES of an
+almost-convex train-loss basin; SWAP sits nearer the center and wins on test
+error. We emit the error grid as JSON (plane coordinates + errors) and check
+the centrality claim numerically."""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import cnn_task, run_swap
+from repro.core.averaging import average_stacked
+from repro.data.pipeline import Loader
+
+SWAP_HP = dict(workers=4, b1=512, b2=64, steps1=120, steps2=64,
+               lr1=1.2, lr2=0.15, stop_acc=0.93)
+GRID = 9
+
+
+def _flat(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([l.reshape(-1) for l in leaves]), \
+        [l.shape for l in leaves]
+
+
+def _unflat(vec, template):
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    out, off = [], 0
+    for l in leaves:
+        n = l.size
+        out.append(vec[off:off + n].reshape(l.shape))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def run(verbose=True):
+    adapter, train, test_loader = cnn_task(seed=0, noise=3.5)
+    train_loader = Loader(train, 256)
+    swap = run_swap(adapter, train, test_loader, seed=0, **SWAP_HP)
+
+    theta_lb, _ = _flat(swap["phase1_bundle"]["params"])
+    theta_sgd, _ = _flat(jax.tree_util.tree_map(
+        lambda a: a[0], swap["stacked_params"]))
+    theta_swap, _ = _flat(average_stacked(swap["stacked_params"]))
+
+    # orthonormal plane basis through the three points (Garipov-style)
+    u = theta_sgd - theta_lb
+    v = theta_swap - theta_lb
+    v = v - u * (jnp.vdot(u, v) / jnp.vdot(u, u))
+    unorm, vnorm = jnp.linalg.norm(u), jnp.linalg.norm(v)
+    uhat, vhat = u / unorm, v / vnorm
+
+    def coords(theta):
+        d = theta - theta_lb
+        return float(jnp.vdot(d, uhat)), float(jnp.vdot(d, vhat))
+
+    pts = {"LB": coords(theta_lb), "SGD": coords(theta_sgd),
+           "SWAP": coords(theta_swap)}
+
+    # evaluate error over the bounding grid (with margin), recomputing BN
+    # stats per plane point exactly as the paper does
+    all_a = [p[0] for p in pts.values()]
+    all_b = [p[1] for p in pts.values()]
+    amin, amax = min(all_a), max(all_a)
+    bmin, bmax = min(all_b), max(all_b)
+    ma, mb = 0.4 * (amax - amin + 1e-9), 0.4 * (bmax - bmin + 1e-9)
+    alphas = np.linspace(amin - ma, amax + ma, GRID)
+    betas = np.linspace(bmin - mb, bmax + mb, GRID)
+
+    template = swap["phase1_bundle"]["params"]
+    grid = []
+    for a in alphas:
+        for b in betas:
+            theta = theta_lb + a * uhat + b * vhat
+            params = _unflat(theta, template)
+            bundle = adapter.finalize(params, train_loader, n_batches=2)
+            tr = adapter.eval_accuracy(bundle, Loader(train, 256),
+                                       max_batches=2)
+            te = adapter.eval_accuracy(bundle, test_loader, max_batches=2)
+            grid.append({"alpha": float(a), "beta": float(b),
+                         "train_err": 1 - tr, "test_err": 1 - te})
+
+    # errors AT the exact three points (grid cells are too coarse to
+    # separate them), BN stats recomputed per point as the paper does
+    exact = {}
+    for name, theta in (("LB", theta_lb), ("SGD", theta_sgd),
+                        ("SWAP", theta_swap)):
+        bundle = adapter.finalize(_unflat(theta, template), train_loader,
+                                  n_batches=4)
+        exact[name] = {
+            "train_err": 1 - adapter.eval_accuracy(bundle, Loader(train, 256),
+                                                   max_batches=4),
+            "test_err": 1 - adapter.eval_accuracy(bundle, test_loader,
+                                                  max_batches=4)}
+
+    result = {"points": pts, "grid": grid,
+              "train_err": {k: exact[k]["train_err"] for k in exact},
+              "test_err": {k: exact[k]["test_err"] for k in exact}}
+    if verbose:
+        print("\n== Figure 2/3 analog (loss-landscape plane) ==")
+        print("points (plane coords):", {k: tuple(round(x, 2) for x in v)
+                                         for k, v in pts.items()})
+        print("nearest-grid train err:", {k: round(v, 3) for k, v
+                                          in result["train_err"].items()})
+        print("nearest-grid test err: ", {k: round(v, 3) for k, v
+                                          in result["test_err"].items()})
+    return result
+
+
+def main():
+    out = run()
+    with open("results/figure23.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

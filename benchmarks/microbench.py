@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks (CPU wall-clock; the TPU story is the dry-run).
+Emits ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.ssd.ops import ssd_scan
+from repro.kernels.swa_avg.ops import running_average
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(verbose=True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention: B=2, S=512, H=8, D=64, GQA 2
+    q = jax.random.normal(key, (2, 512, 8, 64))
+    k = jax.random.normal(key, (2, 512, 2, 64))
+    v = jax.random.normal(key, (2, 512, 2, 64))
+    for impl in ("naive", "reference", "pallas"):
+        fn = jax.jit(lambda q, k, v, impl=impl: flash_attention(
+            q, k, v, impl=impl, chunk=128))
+        us = _time(fn, q, k, v)
+        flops = 2 * 2 * 512 * 512 * 8 * 64 * 2
+        rows.append(csv_row(f"flash_attention[{impl}]", us,
+                            f"{flops/us/1e3:.1f}GFLOP/s"))
+
+    # ssd: B=2, S=512, H=8, P=32, N=16
+    x = jax.random.normal(key, (2, 512, 8, 32))
+    dt = jax.nn.softplus(jax.random.normal(key, (2, 512, 8)))
+    A = -jnp.exp(jax.random.normal(key, (8,)))
+    Bm = jax.random.normal(key, (2, 512, 1, 16))
+    Cm = jax.random.normal(key, (2, 512, 1, 16))
+    D = jax.random.normal(key, (8,))
+    for impl in ("naive", "reference", "pallas"):
+        fn = jax.jit(lambda *a, impl=impl: ssd_scan(*a, impl=impl,
+                                                    chunk=128)[0])
+        us = _time(fn, x, dt, A, Bm, Cm, D)
+        rows.append(csv_row(f"ssd_scan[{impl}]", us,
+                            f"S=512 chunk=128"))
+
+    # swa_avg: 10M-element buffer
+    w1 = jax.random.normal(key, (10_000_000,))
+    w2 = jax.random.normal(jax.random.PRNGKey(1), (10_000_000,))
+    for impl in ("reference", "pallas"):
+        fn = jax.jit(lambda a, b, impl=impl: running_average(a, b, 3.0,
+                                                             impl=impl))
+        us = _time(fn, w1, w2)
+        gb = 3 * 4 * 10e6 / 2**30
+        rows.append(csv_row(f"swa_avg[{impl}]", us,
+                            f"{gb/(us/1e6):.1f}GiB/s"))
+    if verbose:
+        print("\n== kernel microbench (CPU; interpret-mode pallas) ==")
+        for r in rows:
+            print(r)
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

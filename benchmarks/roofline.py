@@ -1,0 +1,61 @@
+"""Roofline report: renders the per-(arch x shape x mesh) table from the
+dry-run JSON (see EXPERIMENTS.md §Roofline). No computation here — the
+numbers come from compiled artifacts."""
+from __future__ import annotations
+
+import json
+import os
+
+HW = "TPU v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link ICI"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:7.2f}s"
+    return f"{x*1e3:6.1f}ms"
+
+
+def run(path="results/dryrun.json", verbose=True, mesh="single"):
+    if not os.path.exists(path):
+        print(f"(roofline: {path} missing — run repro.launch.dryrun first)")
+        return {}
+    with open(path) as f:
+        data = json.load(f)
+    rows = []
+    for key, r in sorted(data.items()):
+        if r.get("phase2") or r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append((r["arch"], r["shape"], "SKIP", None, None, None,
+                         None, None))
+            continue
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], "ERR", None, None, None,
+                         None, None))
+            continue
+        rows.append((r["arch"], r["shape"], r["bottleneck"], r["compute_s"],
+                     r["memory_s"], r["collective_s"],
+                     r["useful_compute_ratio"],
+                     r.get("memory_analysis", {}).get("temp_bytes")))
+    if verbose:
+        print(f"\n== Roofline ({mesh} pod; {HW}) ==")
+        print(f"{'arch':24s} {'shape':12s} {'bottleneck':10s} "
+              f"{'compute':>9s} {'memory':>9s} {'collect.':>9s} "
+              f"{'MF/HLO':>7s} {'temp GB/dev':>11s}")
+        for a, s, bn, c, m, co, ur, tb in rows:
+            ur_s = f"{ur:.3f}" if ur else "-"
+            tb_s = f"{tb/2**30:.2f}" if tb else "-"
+            print(f"{a:24s} {s:12s} {bn:10s} {fmt_s(c):>9s} {fmt_s(m):>9s} "
+                  f"{fmt_s(co):>9s} {ur_s:>7s} {tb_s:>11s}")
+    return rows
+
+
+def main():
+    run(mesh="single")
+    run(mesh="multi")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Benchmark aggregator — one entry per paper table/figure + roofline +
+kernel microbench. Prints ``name,us_per_call,derived`` CSV at the end.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1 ...]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import statistics
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="single seed per table")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    os.makedirs("results", exist_ok=True)
+    seeds = (0,) if args.quick else (0, 1, 2)
+    csv = []
+
+    def want(name):
+        return args.only is None or name in args.only
+
+    def record(name, secs, derived=""):
+        csv.append(f"{name},{secs*1e6:.0f},{derived}")
+
+    def acc_of(table, row):
+        return statistics.mean(table[row]["acc"])
+
+    if want("table1"):
+        from benchmarks import table1_cifar10
+        t0 = time.perf_counter()
+        t1 = table1_cifar10.run(seeds=seeds)
+        record("table1_cifar10", time.perf_counter() - t0,
+               f"swap_after={acc_of(t1, 'SWAP (after averaging)'):.4f};"
+               f"small={acc_of(t1, 'SGD (small-batch)'):.4f};"
+               f"large={acc_of(t1, 'SGD (large-batch)'):.4f}")
+        import json
+        json.dump(t1, open("results/table1.json", "w"), indent=1)
+
+    if want("table2"):
+        from benchmarks import table2_cifar100
+        t0 = time.perf_counter()
+        t2 = table2_cifar100.run(seeds=seeds)
+        record("table2_cifar100", time.perf_counter() - t0,
+               f"swap_after={acc_of(t2, 'SWAP (after averaging)'):.4f};"
+               f"small={acc_of(t2, 'SGD (small-batch)'):.4f}")
+        import json
+        json.dump(t2, open("results/table2.json", "w"), indent=1)
+
+    if want("table3"):
+        from benchmarks import table3_imagenet
+        t0 = time.perf_counter()
+        t3 = table3_imagenet.run(seeds=seeds)
+        record("table3_imagenet", time.perf_counter() - t0,
+               f"swap_after={acc_of(t3, 'SWAP (after averaging)'):.4f}")
+        import json
+        json.dump(t3, open("results/table3.json", "w"), indent=1)
+
+    if want("table4"):
+        from benchmarks import table4_swa_vs_swap
+        t0 = time.perf_counter()
+        t4 = table4_swa_vs_swap.run(seeds=seeds[:2] if len(seeds) > 1
+                                    else seeds)
+        seq = statistics.mean(t4["LB followed by small-batch SWA"]["time"])
+        par = statistics.mean(t4["SWAP (1-cycle workers)"]["time"])
+        record("table4_swa_vs_swap", time.perf_counter() - t0,
+               f"swa_over_swap_time={seq/par:.2f}x")
+        import json
+        json.dump(t4, open("results/table4.json", "w"), indent=1)
+
+    if want("figure1"):
+        from benchmarks import figure1_curves
+        t0 = time.perf_counter()
+        f1 = figure1_curves.run()
+        record("figure1_curves", time.perf_counter() - t0,
+               f"late_steps_avg_above_best={f1['late_steps_avg_above_best']}")
+        import json
+        json.dump(f1, open("results/figure1.json", "w"), indent=1)
+
+    if want("figure23"):
+        from benchmarks import figure23_landscape
+        t0 = time.perf_counter()
+        f23 = figure23_landscape.run()
+        record("figure23_landscape", time.perf_counter() - t0,
+               f"test_err_swap={f23['test_err']['SWAP']:.3f};"
+               f"test_err_lb={f23['test_err']['LB']:.3f}")
+        import json
+        json.dump(f23, open("results/figure23.json", "w"), indent=1)
+
+    if want("figure4"):
+        from benchmarks import figure4_cosine
+        t0 = time.perf_counter()
+        f4 = figure4_cosine.run()
+        record("figure4_cosine", time.perf_counter() - t0,
+               f"early={f4['early_mean']:.3f};late={f4['late_mean']:.3f}")
+        import json
+        json.dump(f4, open("results/figure4.json", "w"), indent=1)
+
+    if want("roofline"):
+        from benchmarks import roofline
+        roofline.run(mesh="single")
+        roofline.run(mesh="multi")
+
+    if want("microbench"):
+        from benchmarks import microbench
+        rows = microbench.run()
+        csv.extend(rows)
+
+    if args.only and "ablation" in args.only:
+        # beyond-paper worker-count ablation (opt-in: ~15 min)
+        from benchmarks import ablation_workers
+        t0 = time.perf_counter()
+        ab = ablation_workers.run()
+        import json
+        json.dump(ab, open("results/ablation_workers.json", "w"), indent=1)
+        record("ablation_workers", time.perf_counter() - t0)
+
+    print("\n== CSV (name,us_per_call,derived) ==")
+    for row in csv:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Table 1 analog (CIFAR10): small-batch vs large-batch vs SWAP on the
+CNN+BN model over the synthetic image task.
+
+Paper (CIFAR10): small 95.24 / 254s; large 94.77 / 133s; SWAP(before) 94.70
+/ 168s; SWAP(after) 95.23 / 169s. We reproduce the ordering:
+  acc: SWAP(after) ~ small > large ~ SWAP(before);
+  time: SWAP ~ large << small.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import cnn_task, mean_std, run_sgd, run_swap
+
+# Grid-searched like the paper (Appendix A): small-batch 20 epochs at
+# lr 0.4; large-batch 30 epochs (paper uses 1.5x epochs for LB) at lr 1.2
+# (~linear scaling of 8x batch, paper: 0.3 -> 1.2); SWAP phase 1 stops at
+# 93% train accuracy, phase 2 runs 8 workers at the small batch size.
+SMALL = dict(batch_size=64, steps=640, peak_lr=0.4)
+LARGE = dict(batch_size=512, steps=120, peak_lr=1.2)
+SWAP_HP = dict(workers=8, b1=512, b2=64, steps1=120, steps2=96,
+               lr1=1.2, lr2=0.15, stop_acc=0.93)
+NOISE = 3.5
+
+
+def run(seeds=(0, 1, 2), verbose=True):
+    rows = {"SGD (small-batch)": [], "SGD (large-batch)": [],
+            "SWAP (before averaging)": [], "SWAP (after averaging)": []}
+    times = {k: [] for k in rows}
+    updates = {k: [] for k in rows}
+    for seed in seeds:
+        adapter, train, test_loader = cnn_task(seed=seed, noise=NOISE)
+        small = run_sgd(adapter, train, test_loader, seed=seed, **SMALL)
+        large = run_sgd(adapter, train, test_loader, seed=seed, **LARGE)
+        swap = run_swap(adapter, train, test_loader, seed=seed, **SWAP_HP)
+        rows["SGD (small-batch)"].append(small["test_acc"])
+        rows["SGD (large-batch)"].append(large["test_acc"])
+        rows["SWAP (before averaging)"].append(swap["before_avg_test_acc"])
+        rows["SWAP (after averaging)"].append(swap["after_avg_test_acc"])
+        times["SGD (small-batch)"].append(small["time"])
+        times["SGD (large-batch)"].append(large["time"])
+        swap_t = swap["phase1_time"] + swap["phase2_time"]
+        times["SWAP (before averaging)"].append(swap_t)
+        times["SWAP (after averaging)"].append(swap_t + swap["phase3_time"])
+        # sequential update counts — the scaling-relevant time proxy (a
+        # single CPU can't reward parallelism; per-update target-hardware
+        # cost comes from the §Roofline table)
+        updates["SGD (small-batch)"].append(small["steps"])
+        updates["SGD (large-batch)"].append(large["steps"])
+        swap_u = swap["phase1_steps"] + SWAP_HP["steps2"]
+        updates["SWAP (before averaging)"].append(swap_u)
+        updates["SWAP (after averaging)"].append(swap_u)
+    out = {}
+    if verbose:
+        print("\n== Table 1 analog (CIFAR10 / CNN+BN on synthetic images) ==")
+        print(f"{'row':28s} {'test acc':>20s} {'time (s)':>18s} "
+              f"{'updates':>9s}")
+    for k in rows:
+        out[k] = {"acc": rows[k], "time": times[k], "updates": updates[k]}
+        if verbose:
+            u = int(sum(updates[k]) / len(updates[k]))
+            print(f"{k:28s} {mean_std(rows[k]):>20s} "
+                  f"{mean_std(times[k]):>18s} {u:>9d}")
+    return out
+
+
+def main():
+    out = run()
+    with open("results/table1.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

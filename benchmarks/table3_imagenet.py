@@ -1,0 +1,54 @@
+"""Table 3 analog (ImageNet): the paper accelerates a transformer-scale
+pipeline with TWO phase-2 workers and no extra tuning beyond doubling LR with
+batch size. We mirror that on the LM task with a transformer arch: large
+batch = 2x small batch, LR doubled, phase 2 = 2 workers on the original
+schedule."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import lm_task, mean_std, run_sgd, run_swap
+
+SMALL = dict(batch_size=64, steps=240, peak_lr=0.5)
+LARGE = dict(batch_size=128, steps=120, peak_lr=1.0)
+SWAP_HP = dict(workers=2, b1=128, b2=64, steps1=120, steps2=60,
+               lr1=1.0, lr2=0.25, stop_acc=0.68)
+
+
+def run(seeds=(0, 1, 2), verbose=True):
+    rows = {"SGD (small-batch)": [], "SGD (large-batch)": [],
+            "SWAP (before averaging)": [], "SWAP (after averaging)": []}
+    times = {k: [] for k in rows}
+    for seed in seeds:
+        adapter, train, test_loader = lm_task(seed=seed)
+        small = run_sgd(adapter, train, test_loader, seed=seed, **SMALL)
+        large = run_sgd(adapter, train, test_loader, seed=seed, **LARGE)
+        swap = run_swap(adapter, train, test_loader, seed=seed, **SWAP_HP)
+        rows["SGD (small-batch)"].append(small["test_acc"])
+        rows["SGD (large-batch)"].append(large["test_acc"])
+        rows["SWAP (before averaging)"].append(swap["before_avg_test_acc"])
+        rows["SWAP (after averaging)"].append(swap["after_avg_test_acc"])
+        times["SGD (small-batch)"].append(small["time"])
+        times["SGD (large-batch)"].append(large["time"])
+        swap_t = swap["phase1_time"] + swap["phase2_time"]
+        times["SWAP (before averaging)"].append(swap_t)
+        times["SWAP (after averaging)"].append(swap_t + swap["phase3_time"])
+    out = {}
+    if verbose:
+        print("\n== Table 3 analog (ImageNet protocol / LM task, 2 workers) ==")
+        print(f"{'row':28s} {'test acc':>20s} {'time (s)':>20s}")
+    for k in rows:
+        out[k] = {"acc": rows[k], "time": times[k]}
+        if verbose:
+            print(f"{k:28s} {mean_std(rows[k]):>20s} {mean_std(times[k]):>20s}")
+    return out
+
+
+def main():
+    out = run()
+    with open("results/table3.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

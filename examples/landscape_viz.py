@@ -1,0 +1,41 @@
+"""Loss-landscape visualization (paper Figures 2/3): writes the train/test
+error grid over the (LB, SGD, SWAP) plane to results/figure23.json and
+renders an ASCII heat map.
+
+  PYTHONPATH=src python examples/landscape_viz.py
+"""
+import json
+import os
+
+from benchmarks.figure23_landscape import run
+
+
+def ascii_map(grid, key, n=9):
+    vals = sorted(g[key] for g in grid)
+    lo, hi = vals[0], vals[-1]
+    chars = " .:-=+*#%@"
+    rows = {}
+    for g in grid:
+        rows.setdefault(round(g["beta"], 6), []).append(g)
+    print(f"\n{key} (low '{chars[0]}' ... high '{chars[-1]}'), "
+          f"range [{lo:.3f}, {hi:.3f}]")
+    for beta in sorted(rows, reverse=True):
+        line = ""
+        for g in sorted(rows[beta], key=lambda g: g["alpha"]):
+            t = (g[key] - lo) / (hi - lo + 1e-12)
+            line += chars[min(int(t * (len(chars) - 1)), len(chars) - 1)] * 2
+        print(line)
+
+
+def main():
+    os.makedirs("results", exist_ok=True)
+    res = run(verbose=True)
+    with open("results/figure23.json", "w") as f:
+        json.dump(res, f, indent=1)
+    ascii_map(res["grid"], "train_err")
+    ascii_map(res["grid"], "test_err")
+    print("\npoints:", res["points"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Msgpack pytree checkpointing (no orbax in this environment).
+
+Stores a flat {path: (dtype, shape, raw bytes)} map plus the treedef repr;
+round-trips arbitrary nested dict/list pytrees of arrays and scalars.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        flat[key] = {
+            "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    return flat
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    payload = _flatten(tree)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+
+
+def load_pytree(path: str, template: Any):
+    """Restore into the structure of ``template`` (values are replaced)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+
+    leaves_paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    new_leaves = []
+    for pth, leaf in leaves_paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pth)
+        if key not in payload:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        rec = payload[key]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        new_leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,29 @@
+"""granite-moe-3b-a800m [moe] — 40 experts top-8 (spec line; bracket cites the
+granite-3.0-1b-a400m card which has 32 — we implement 40 per the assignment
+spec line, see DESIGN.md §7). GQA kv=8, expert d_ff=512.
+[hf:ibm-granite/granite-3.0-1b-a400m-base]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+ARCH_ID = "granite-moe-3b-a800m"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="moe",
+        n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, head_dim=64,
+        d_ff=512, vocab_size=49155,
+        attention="gqa", qkv_bias=False, rope_theta=10_000.0,
+        moe=MoEConfig(n_experts=40, top_k=8, d_ff=512, capacity_factor=1.25),
+        norm="rmsnorm", act="silu",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", family="moe",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+        d_ff=64, vocab_size=512,
+        attention="gqa",
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff=64, capacity_factor=1.5),
+        norm="rmsnorm", act="silu", dtype="float32", remat=False,
+    )

@@ -1,0 +1,9 @@
+"""SWAP — the paper's contribution: three-phase large-batch + parallel
+weight-averaging training (controller, schedules, averaging, SWA baseline)."""
+from repro.core.adapters import CNNAdapter, LMAdapter
+from repro.core.averaging import (
+    StreamingAverage, average_list, average_stacked, recompute_bn_stats,
+)
+from repro.core.schedules import schedule_fn
+from repro.core.swa import SWA
+from repro.core.swap import SGDRun, SWAP

@@ -1,0 +1,135 @@
+"""Model adapters: a uniform (init / train_step / eval / finalize) surface
+over the two model kinds SWAP trains in this repo:
+
+  * LMAdapter  — any assigned transformer/SSM/MoE architecture (Model);
+  * CNNAdapter — the paper-faithful CNN+BatchNorm (phase-3 stat recompute).
+
+A *bundle* is {"params": trainable pytree, "state": non-trainable pytree}
+(BN running stats for the CNN; empty for norm-stat-free LMs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, OptimizerConfig
+from repro.core.averaging import recompute_bn_stats
+from repro.data.augment import augment_images
+from repro.data.pipeline import Loader
+from repro.models import cnn as cnn_mod
+from repro.models.model import Model
+from repro.optim.api import init_optimizer
+from repro.train.steps import lm_loss_and_metrics
+
+
+class LMAdapter:
+    kind = "lm"
+
+    def __init__(self, cfg: ModelConfig, opt_cfg: OptimizerConfig):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.model = Model(cfg)
+        self.opt_init, self._opt_update = init_optimizer(opt_cfg)
+
+    def init(self, key) -> Dict:
+        return {"params": self.model.init(key), "state": {}}
+
+    def init_opt(self, bundle):
+        return self.opt_init(bundle["params"])
+
+    def make_train_step(self, schedule_fn: Callable):
+        def train_step(bundle, opt_state, batch, step):
+            def loss_fn(p):
+                return lm_loss_and_metrics(self.model, p, batch)
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(bundle["params"])
+            lr = schedule_fn(step)
+            new_p, new_opt = self._opt_update(grads, opt_state,
+                                              bundle["params"], lr)
+            return {"params": new_p, "state": {}}, new_opt, dict(metrics,
+                                                                 lr=lr)
+        return train_step
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def _eval_batch(self, bundle, batch):
+        _, metrics = lm_loss_and_metrics(self.model, bundle["params"], batch)
+        return metrics
+
+    def eval_accuracy(self, bundle, loader: Loader, max_batches: int = 8):
+        accs = []
+        for i in range(min(max_batches, loader.steps_per_epoch)):
+            m = self._eval_batch(bundle, loader.batch(i))
+            accs.append(float(m["accuracy"]))
+        return sum(accs) / len(accs)
+
+    def finalize(self, params, loader: Loader, n_batches: int = 8) -> Dict:
+        """No norm statistics to recompute for RMSNorm/LayerNorm LMs —
+        phase 3 reduces to the plain average (executed as a no-op hook)."""
+        return {"params": params, "state": {}}
+
+
+class CNNAdapter:
+    kind = "cnn"
+
+    def __init__(self, cfg: ModelConfig, opt_cfg: OptimizerConfig):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.opt_init, self._opt_update = init_optimizer(opt_cfg)
+
+    def init(self, key) -> Dict:
+        params, state = cnn_mod.init_cnn(key, self.cfg)
+        return {"params": params, "state": state}
+
+    def init_opt(self, bundle):
+        return self.opt_init(bundle["params"])
+
+    def _loss(self, params, state, batch):
+        images = batch["images"]
+        if "aug_seed" in batch:
+            images = augment_images(images, batch["aug_seed"])
+        logits, new_state = cnn_mod.apply_cnn(params, state, images,
+                                              self.cfg, train=True)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return loss, ({"loss": loss, "accuracy": acc,
+                       "aux": jnp.zeros((), jnp.float32)}, new_state)
+
+    def make_train_step(self, schedule_fn: Callable):
+        def train_step(bundle, opt_state, batch, step):
+            (_, (metrics, new_state)), grads = jax.value_and_grad(
+                self._loss, has_aux=True)(bundle["params"], bundle["state"],
+                                          batch)
+            lr = schedule_fn(step)
+            new_p, new_opt = self._opt_update(grads, opt_state,
+                                              bundle["params"], lr)
+            return ({"params": new_p, "state": new_state}, new_opt,
+                    dict(metrics, lr=lr))
+        return train_step
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def _eval_batch(self, bundle, batch):
+        logits, _ = cnn_mod.apply_cnn(bundle["params"], bundle["state"],
+                                      batch["images"], self.cfg, train=False)
+        return jnp.mean((jnp.argmax(logits, -1) == batch["labels"])
+                        .astype(jnp.float32))
+
+    def eval_accuracy(self, bundle, loader: Loader, max_batches: int = 8):
+        accs = []
+        for i in range(min(max_batches, loader.steps_per_epoch)):
+            accs.append(float(self._eval_batch(bundle, loader.batch(i))))
+        return sum(accs) / len(accs)
+
+    def finalize(self, params, loader: Loader, n_batches: int = 8) -> Dict:
+        """Paper Algorithm 1 line 28: recompute BN statistics for the
+        averaged weights with a pass over the training data."""
+        stats_fn = jax.jit(lambda p, batch: cnn_mod.cnn_batch_stats(
+            p, batch["images"], self.cfg))
+        batches = (loader.batch(i) for i in
+                   range(min(n_batches, loader.steps_per_epoch)))
+        state = recompute_bn_stats(stats_fn, params, batches)
+        return {"params": params, "state": state}

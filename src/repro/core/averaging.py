@@ -1,0 +1,76 @@
+"""Phase 3: weight averaging + batch-norm statistic recomputation.
+
+Algorithm 1, lines 27-28 of the paper:
+    θ̂ ← (1/W) Σ θ_w ;  recompute BN statistics for θ̂.
+
+Averaging comes in two forms:
+  * ``average_stacked`` — mean over the leading worker axis (phase 3 proper;
+    on the TPU mesh this is a `pmean` over the `worker` axis, emitted by
+    GSPMD from the jnp.mean below);
+  * ``StreamingAverage`` — running mean folding one model at a time (the SWA
+    baseline and multi-sample SWAP variants; `swa_avg` Pallas kernel on TPU).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.swa_avg import running_average_tree
+
+
+def average_stacked(stacked_params):
+    """Mean over the leading (worker) axis of every leaf."""
+    return jax.tree_util.tree_map(lambda a: jnp.mean(a, axis=0),
+                                  stacked_params)
+
+
+def average_list(params_list):
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params_list)
+    return average_stacked(stacked)
+
+
+class StreamingAverage:
+    """Numerically-stable running mean of parameter pytrees."""
+
+    def __init__(self, impl: str = "reference"):
+        self.impl = impl
+        self.n = 0
+        self.avg = None
+
+    def add(self, params):
+        if self.avg is None:
+            # jnp.array(copy=True): the caller's buffers may be donated to
+            # its next train step — never hold references into them.
+            self.avg = jax.tree_util.tree_map(
+                lambda a: jnp.array(a, jnp.float32, copy=True), params)
+        else:
+            self.avg = running_average_tree(self.avg, params, float(self.n),
+                                            impl=self.impl)
+        self.n += 1
+        return self.avg
+
+    def value(self):
+        if self.avg is None:
+            raise ValueError("no models folded in yet")
+        return self.avg
+
+
+def recompute_bn_stats(batch_stats_fn: Callable, params,
+                       batches: Iterable) -> dict:
+    """One pass over training data producing fresh BN running statistics for
+    averaged weights. ``batch_stats_fn(params, batch) -> {layer: {mean,var}}``.
+    Aggregates by simple averaging over batches (paper: 'computing new
+    batch-normalization statistics ... through one pass over the data')."""
+    acc, n = None, 0
+    for batch in batches:
+        stats = batch_stats_fn(params, batch)
+        if acc is None:
+            acc = jax.tree_util.tree_map(lambda x: x, stats)
+        else:
+            acc = jax.tree_util.tree_map(jnp.add, acc, stats)
+        n += 1
+    if acc is None:
+        return {}
+    return jax.tree_util.tree_map(lambda x: x / n, acc)

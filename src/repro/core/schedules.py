@@ -1,0 +1,43 @@
+"""Learning-rate schedules.
+
+The paper uses piecewise-linear warmup+decay for phases 1/2 (cifar10-fast
+style) and cyclic triangular schedules for SWA sampling (Figure 6). All
+schedules are jit-safe functions of a (traced) step index.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ScheduleConfig
+
+
+def schedule_fn(cfg: ScheduleConfig):
+    if cfg.kind == "const":
+        return lambda step: jnp.asarray(cfg.peak_lr, jnp.float32)
+
+    if cfg.kind in ("warmup_linear", "warmup_cosine"):
+        def fn(step):
+            step = jnp.asarray(step, jnp.float32)
+            warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+            t = (step - cfg.warmup_steps) / jnp.maximum(
+                cfg.total_steps - cfg.warmup_steps, 1)
+            t = jnp.clip(t, 0.0, 1.0)
+            if cfg.kind == "warmup_linear":
+                decay = cfg.peak_lr + (cfg.end_lr - cfg.peak_lr) * t
+            else:
+                decay = cfg.end_lr + 0.5 * (cfg.peak_lr - cfg.end_lr) * (
+                    1.0 + jnp.cos(jnp.pi * t))
+            return jnp.where(step < cfg.warmup_steps, warm, decay)
+        return fn
+
+    if cfg.kind == "cyclic":
+        # SWA triangular cycles: start each cycle at peak_lr, decay linearly
+        # to min_lr at the cycle end (models sampled at cycle boundaries).
+        def fn(step):
+            step = jnp.asarray(step, jnp.float32)
+            c = jnp.maximum(cfg.cycle_steps, 1)
+            t = jnp.mod(step, c) / c
+            return cfg.peak_lr + (cfg.min_lr - cfg.peak_lr) * t
+        return fn
+
+    raise ValueError(f"unknown schedule kind {cfg.kind!r}")

@@ -1,0 +1,156 @@
+"""SWAP (Algorithm 1 of the paper) — the three-phase controller.
+
+Phase 1: synchronous large-batch SGD until train accuracy >= τ (EMA over
+         batch accuracy — the paper uses epoch train accuracy; EMA is the
+         streaming equivalent) or max_steps.
+Phase 2: W independent small-batch workers from the common phase-1 model,
+         each with its own data ordering — executed as a *worker-axis
+         ensemble*: parameters stacked on a leading W axis and the step
+         vmapped. On a TPU mesh the W axis is sharded on the `worker` mesh
+         axis so the lowered program has no cross-worker collectives; on CPU
+         the same code runs as a plain vmap.
+Phase 3: average the W models; recompute BN statistics (adapter hook).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PhaseConfig, SWAPConfig
+from repro.core.averaging import average_stacked
+from repro.core.schedules import schedule_fn as make_schedule
+from repro.data.pipeline import Loader
+
+
+def _stack_bundles(bundle, n: int):
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), bundle)
+
+
+def _stack_batches(batches: List[Dict]):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *batches)
+
+
+class SGDRun:
+    """Plain single-model training loop (phase 1, and the small/large-batch
+    baselines of Tables 1-3)."""
+
+    def __init__(self, adapter, phase: PhaseConfig, train_arrays: Dict,
+                 seed: int = 0):
+        self.adapter = adapter
+        self.phase = phase
+        self.loader = Loader(train_arrays, phase.batch_size, seed=seed)
+        sched = make_schedule(phase.schedule)
+        self.step_fn = jax.jit(adapter.make_train_step(sched),
+                               donate_argnums=(0, 1))
+
+    def run(self, bundle, opt_state=None, start_step: int = 0,
+            log: Optional[list] = None, worker: int = 0):
+        """Returns (bundle, opt_state, steps_taken, acc_ema)."""
+        phase = self.phase
+        opt_state = opt_state if opt_state is not None \
+            else self.adapter.init_opt(bundle)
+        ema, beta = 0.0, phase.accuracy_ema
+        step = start_step
+        for step in range(start_step, start_step + phase.max_steps):
+            batch = self.loader.batch(step, worker=worker)
+            bundle, opt_state, metrics = self.step_fn(
+                bundle, opt_state, batch, step)
+            acc = float(metrics["accuracy"])
+            ema = beta * ema + (1 - beta) * acc
+            if log is not None:
+                log.append({"step": step, "accuracy": acc, "ema": ema,
+                            "loss": float(metrics["loss"]),
+                            "lr": float(metrics["lr"])})
+            if ema >= phase.stop_accuracy:
+                break
+        return bundle, opt_state, step + 1 - start_step, ema
+
+
+class SWAP:
+    """The full three-phase algorithm over an adapter + dataset."""
+
+    def __init__(self, adapter, cfg: SWAPConfig, train_arrays: Dict,
+                 test_loader: Loader):
+        self.adapter = adapter
+        self.cfg = cfg
+        self.train_arrays = train_arrays
+        self.test_loader = test_loader
+
+    def run(self, key, collect_curves: bool = False) -> Dict:
+        cfg = self.cfg
+        adapter = self.adapter
+        results: Dict = {"phase1_log": [], "phase2_curves": []}
+
+        # ---------------- phase 1: large batch, synchronous --------------
+        t0 = time.perf_counter()
+        bundle = adapter.init(key)
+        p1 = SGDRun(adapter, cfg.phase1, self.train_arrays, seed=cfg.seed)
+        bundle, _, steps1, ema1 = p1.run(bundle, log=results["phase1_log"])
+        t1 = time.perf_counter()
+        results["phase1_steps"] = steps1
+        results["phase1_train_acc"] = ema1
+        results["phase1_time"] = t1 - t0
+        results["phase1_test_acc"] = adapter.eval_accuracy(
+            bundle, self.test_loader)
+
+        # ---------------- phase 2: independent small-batch workers -------
+        W = cfg.n_workers
+        loader2 = Loader(self.train_arrays, cfg.phase2.batch_size,
+                         seed=cfg.seed + 1)
+        sched2 = make_schedule(cfg.phase2.schedule)
+        raw_step = adapter.make_train_step(sched2)
+        ens_step = jax.jit(jax.vmap(raw_step, in_axes=(0, 0, 0, None)),
+                           donate_argnums=(0, 1))
+
+        stacked = _stack_bundles(bundle, W)
+        opt_stacked = jax.vmap(adapter.init_opt)(stacked)
+        for step in range(cfg.phase2.max_steps):
+            batches = _stack_batches(
+                [loader2.batch(step, worker=w) for w in range(W)])
+            stacked, opt_stacked, metrics = ens_step(
+                stacked, opt_stacked, batches, step)
+            if collect_curves:
+                avg_now = adapter.finalize(
+                    average_stacked(stacked["params"]),
+                    Loader(self.train_arrays, cfg.bn_recompute_batch_size,
+                           seed=cfg.seed), cfg.bn_recompute_batches)
+                worker_accs = [
+                    adapter.eval_accuracy(
+                        jax.tree_util.tree_map(lambda a: a[w], stacked),
+                        self.test_loader, max_batches=2)
+                    for w in range(W)]
+                results["phase2_curves"].append({
+                    "step": step, "worker_test_accs": worker_accs,
+                    "avg_test_acc": adapter.eval_accuracy(
+                        avg_now, self.test_loader, max_batches=2)})
+        t2 = time.perf_counter()
+        results["phase2_time"] = t2 - t1
+
+        # per-worker test accuracy BEFORE averaging (paper's row 3)
+        worker_accs = []
+        for w in range(W):
+            b_w = jax.tree_util.tree_map(lambda a: a[w], stacked)
+            worker_accs.append(adapter.eval_accuracy(b_w, self.test_loader))
+        results["worker_test_accs"] = worker_accs
+        results["before_avg_test_acc"] = sum(worker_accs) / W
+
+        # ---------------- phase 3: average + BN recompute ----------------
+        t3 = time.perf_counter()
+        avg_params = average_stacked(stacked["params"])
+        bn_loader = Loader(self.train_arrays, cfg.bn_recompute_batch_size,
+                           seed=cfg.seed)
+        final = adapter.finalize(avg_params, bn_loader,
+                                 cfg.bn_recompute_batches)
+        t4 = time.perf_counter()
+        results["phase3_time"] = t4 - t3
+        results["after_avg_test_acc"] = adapter.eval_accuracy(
+            final, self.test_loader)
+        results["total_time"] = t4 - t0
+        results["final_bundle"] = final
+        results["stacked_params"] = stacked["params"]
+        results["phase1_bundle"] = bundle
+        return results

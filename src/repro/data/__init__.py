@@ -1,0 +1,1 @@
+from repro.data.pipeline import Loader, make_gmm_images, make_markov_lm

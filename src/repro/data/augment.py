@@ -1,0 +1,30 @@
+"""Train-time image augmentation (the paper trains with cutout + standard
+CIFAR augmentation; that stochasticity is what lets small-batch SGD walk out
+of the sharp large-batch solution in phase 2).
+
+For the synthetic GMM task the distribution-consistent analog is fresh
+additive noise around the stored sample (same label, perturbed input) plus
+cutout. Applied deterministically from the loader-provided ``aug_seed``
+(a pure function of (seed, worker, step)), so phase-2 workers see different
+augmentations of the same finite dataset."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def augment_images(images, seed, *, noise: float = 1.5, cutout: int = 4):
+    """images: (B, H, W, C) f32; seed: int32 scalar."""
+    key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+    k_noise, k_cx, k_cy = jax.random.split(key, 3)
+    B, H, W, C = images.shape
+    out = images + noise * jax.random.normal(k_noise, images.shape)
+    if cutout > 0:
+        cx = jax.random.randint(k_cx, (B,), 0, H - cutout + 1)
+        cy = jax.random.randint(k_cy, (B,), 0, W - cutout + 1)
+        ii = jnp.arange(H)[None, :, None]
+        jj = jnp.arange(W)[None, None, :]
+        mask = ((ii >= cx[:, None, None]) & (ii < cx[:, None, None] + cutout)
+                & (jj >= cy[:, None, None]) & (jj < cy[:, None, None] + cutout))
+        out = jnp.where(mask[..., None], 0.0, out)
+    return out

@@ -1,0 +1,131 @@
+"""Deterministic synthetic data pipelines.
+
+The container is offline, so the paper's datasets are replaced with two
+synthetic tasks that preserve the properties the paper's claims depend on:
+
+  * a FINITE training set (so a train/test generalization gap exists and
+    large-batch training can plateau at worse test accuracy),
+  * per-worker independent data ORDER in SWAP phase 2 ("each worker performs
+    training using all the data, but sampling in different random order"),
+  * exact reproducibility from a seed (epoch permutations are a pure
+    function of (seed, worker, epoch)).
+
+Tasks:
+  * Markov-chain language modelling — next-token prediction of a fixed
+    random low-entropy transition matrix; train sequences are a finite
+    sample, test sequences are fresh draws from the same chain.
+  * Gaussian-mixture images — n_classes cluster means in (H, W, 3) image
+    space + per-sample noise; the CNN+BN paper-faithful model trains on it.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# dataset builders
+# ---------------------------------------------------------------------------
+
+
+def make_markov_lm(seed: int, vocab: int = 64, n_train: int = 2048,
+                   n_test: int = 512, seq_len: int = 64,
+                   temperature: float = 0.35) -> Dict[str, np.ndarray]:
+    """Finite LM dataset from a fixed random Markov chain. Lower temperature
+    -> lower-entropy chain -> higher attainable accuracy."""
+    key = jax.random.PRNGKey(seed)
+    k_mat, k_train, k_test = jax.random.split(key, 3)
+    logits = jax.random.normal(k_mat, (vocab, vocab)) / temperature
+
+    def sample(key, n):
+        k0, kseq = jax.random.split(key)
+        first = jax.random.randint(k0, (n,), 0, vocab)
+
+        def step(tok, k):
+            nxt = jax.random.categorical(k, logits[tok], axis=-1)
+            return nxt, nxt
+
+        keys = jax.random.split(kseq, seq_len)
+        _, seqs = jax.lax.scan(step, first, keys)
+        return jnp.concatenate([first[:, None], seqs.T], axis=1)  # (n, S+1)
+
+    train = np.asarray(sample(k_train, n_train))
+    test = np.asarray(sample(k_test, n_test))
+    return {
+        "train_tokens": train[:, :-1], "train_labels": train[:, 1:],
+        "test_tokens": test[:, :-1], "test_labels": test[:, 1:],
+        "transition_logits": np.asarray(logits),
+    }
+
+
+def make_gmm_images(seed: int, n_classes: int = 10, image_size: int = 16,
+                    n_train: int = 4096, n_test: int = 1024,
+                    noise: float = 1.5) -> Dict[str, np.ndarray]:
+    """Gaussian-mixture image classification. `noise` controls task
+    difficulty (and therefore the size of the generalization gap)."""
+    key = jax.random.PRNGKey(seed)
+    k_means, k_train, k_test, k_ltr, k_lte = jax.random.split(key, 5)
+    shape = (image_size, image_size, 3)
+    means = jax.random.normal(k_means, (n_classes,) + shape)
+
+    def sample(kimg, klab, n):
+        labels = jax.random.randint(klab, (n,), 0, n_classes)
+        imgs = means[labels] + noise * jax.random.normal(kimg, (n,) + shape)
+        return imgs, labels
+
+    tr_x, tr_y = sample(k_train, k_ltr, n_train)
+    te_x, te_y = sample(k_test, k_lte, n_test)
+    return {
+        "train_images": np.asarray(tr_x), "train_labels": np.asarray(tr_y),
+        "test_images": np.asarray(te_x), "test_labels": np.asarray(te_y),
+    }
+
+
+# ---------------------------------------------------------------------------
+# loader with per-(worker, epoch) permutations
+# ---------------------------------------------------------------------------
+
+
+class Loader:
+    """Epoch-permuted batches over a finite dataset.
+
+    ``batch(step, worker)`` is a pure function of (seed, worker, epoch):
+    each worker walks the full dataset in its own random order — exactly the
+    phase-2 sampling model of the paper. The same loader with worker=0
+    serves phase 1 (all workers consume the same global batch, sharded).
+    """
+
+    def __init__(self, arrays: Dict[str, np.ndarray], batch_size: int,
+                 seed: int = 0):
+        self.arrays = {k: jnp.asarray(v) for k, v in arrays.items()}
+        sizes = {v.shape[0] for v in arrays.values()}
+        assert len(sizes) == 1, "all arrays must share the leading dim"
+        self.n = sizes.pop()
+        self.batch_size = batch_size
+        assert batch_size <= self.n, (batch_size, self.n)
+        self.seed = seed
+        self.steps_per_epoch = self.n // batch_size
+
+    def _perm(self, worker: int, epoch):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), worker), epoch)
+        return jax.random.permutation(key, self.n)
+
+    def batch(self, step, worker: int = 0) -> Dict[str, jnp.ndarray]:
+        epoch = step // self.steps_per_epoch
+        offset = (step % self.steps_per_epoch) * self.batch_size
+        perm = self._perm(worker, epoch)
+        idx = jax.lax.dynamic_slice_in_dim(perm, offset, self.batch_size)
+        out = {k: v[idx] for k, v in self.arrays.items()}
+        # deterministic augmentation seed per (seed, worker, step); training
+        # losses that augment (CNN) consume it, others ignore it.
+        out["aug_seed"] = jnp.asarray(
+            (self.seed * 1000003 + worker * 9176 + int(step)) % (2**31 - 1),
+            jnp.int32)
+        return out
+
+    def epoch_of(self, step) -> int:
+        return step // self.steps_per_epoch

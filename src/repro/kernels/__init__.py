@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+Each kernel package has:
+  kernel.py  — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target,
+               validated with interpret=True on CPU)
+  ops.py     — jit'd public wrapper; dispatches impl in {"reference","pallas"}
+  ref.py     — pure-jnp oracle (simplest correct implementation)
+"""

@@ -1,0 +1,124 @@
+"""Public attention op.
+
+``impl="reference"``: blockwise pure-jnp flash formulation (lax.scan over KV
+chunks, online softmax). This is the path used for lowering/dry-run and CPU
+execution — it has the same O(S) memory behaviour as the kernel, so compiled
+HLO bytes reflect the flash algorithm rather than a materialized QK^T.
+
+``impl="pallas"``: the Pallas TPU kernel (interpret=True off-TPU). Gradient
+support via custom_vjp: forward runs the kernel, backward recomputes with the
+differentiable blockwise reference (standard recompute-in-backward strategy).
+
+``impl="naive"``: the oracle (tests only).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref as _ref
+from repro.kernels.flash_attention.kernel import (
+    flash_attention_pallas, flash_attention_pallas_bwd,
+    flash_attention_pallas_fwd,
+)
+
+
+def _blockwise_reference(q, k, v, *, causal, window, scale, q_offset, chunk):
+    """Online-softmax attention, chunked over KV; pure jnp, differentiable."""
+    B, Sq, H, D = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    scale = scale if scale is not None else D ** -0.5
+    chunk = min(chunk, Skv)
+    # pad Skv to a chunk multiple
+    pad = (-Skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (Skv + pad) // chunk
+
+    # keep Q/K/V in their storage dtype (bf16 on TPU) and accumulate the
+    # dots in f32 via preferred_element_type — halves the attention HBM
+    # traffic vs upcasting inputs to f32 (§Perf iter 4); running stats and
+    # the softmax stay f32 for stability.
+    qf = (q * jnp.asarray(scale, q.dtype)).reshape(B, Sq, KVH, G, D)
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, KVH, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, KVH, D), 1, 0)
+
+    qpos = jnp.arange(Sq) + q_offset
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, ci = xs
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kb,
+                       preferred_element_type=jnp.float32)
+        kpos = ci * chunk + jnp.arange(chunk)
+        mask = kpos[None, :] < Skv
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(m_new > -1e29, p, 0.0)
+        alpha = jnp.where(m > -1e29, jnp.exp(m - m_new), 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha[..., 0][..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(v.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Sq, KVH, G, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KVH, G, 1), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KVH, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnames=("causal", "window", "scale", "q_offset",
+                                     "chunk"))
+def _pallas_attention(q, k, v, causal, window, scale, q_offset, chunk):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  scale=scale, q_offset=q_offset)
+
+
+def _pallas_fwd(q, k, v, causal, window, scale, q_offset, chunk):
+    out, lse = flash_attention_pallas_fwd(
+        q, k, v, causal=causal, window=window, scale=scale,
+        q_offset=q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _pallas_bwd(causal, window, scale, q_offset, chunk, res, g):
+    # true flash backward (Pallas dQ + dK/dV kernels, LSE from forward)
+    q, k, v, out, lse = res
+    return flash_attention_pallas_bwd(
+        q, k, v, out, lse, g, causal=causal, window=window, scale=scale,
+        q_offset=q_offset)
+
+
+_pallas_attention.defvjp(_pallas_fwd, _pallas_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, q_offset: int = 0,
+                    chunk: int = 512, impl: str = "reference"):
+    """GQA flash attention. q: (B,Sq,H,D); k,v: (B,Skv,KVH,D)."""
+    if impl == "naive":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                                  scale=scale, q_offset=q_offset)
+    if impl == "pallas":
+        return _pallas_attention(q, k, v, causal, window, scale, q_offset,
+                                 chunk)
+    if impl == "reference":
+        return _blockwise_reference(q, k, v, causal=causal, window=window,
+                                    scale=scale, q_offset=q_offset,
+                                    chunk=chunk)
+    raise ValueError(f"unknown attention impl {impl!r}")

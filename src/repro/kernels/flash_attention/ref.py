@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for (GQA, causal, sliding-window) attention.
+
+The simplest correct implementation: materializes the full score matrix.
+Used as the ground truth for kernel tests; never used for lowering.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None, q_offset: int = 0):
+    """Naive attention.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KVH, D) with H % KVH == 0.
+    ``q_offset``: absolute position of q[0] (for decode: Skv - Sq).
+    ``window`` > 0 -> sliding-window: key j visible to query i iff
+    i - window < j <= i (causal) — gemma3-style local attention.
+    Returns (B, Sq, H, D) in q.dtype, accumulation in f32.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    scale = scale if scale is not None else D ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    # expand kv heads for GQA
+    qf = qf.reshape(B, Sq, KVH, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf)          # (B,KVH,G,Sq,Skv)
+
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.ssd.ops import ssd_scan

@@ -1,0 +1,236 @@
+"""Mamba-2 SSD intra-chunk kernel in Pallas.
+
+TPU adaptation (vs the Triton SSD kernels in the Mamba-2 release):
+  * The O(L^2) intra-chunk block — (C·Bᵀ ∘ decay-mask) @ (dt·x) — is the
+    MXU hot spot; it runs as one Pallas program per (batch·head, chunk) with
+    chunk length L and head dim P as VMEM-resident tiles (L, P aligned to
+    128 by the caller for real-TPU runs).
+  * The inter-chunk state recurrence is sequential and tiny
+    (nc elements of (P,N) state); it stays in JAX as lax.associative_scan —
+    on TPU this is a log-depth tree of elementwise ops, not worth a kernel.
+  * No shared-memory banking / warp semantics to port: the decay (segsum)
+    matrix is built with broadcasted iota + cumsum inside VMEM.
+
+The kernel emits, per chunk: the intra-chunk output, the chunk-local final
+state contribution, and the in-chunk cumulative decay (needed by the
+inter-chunk correction applied by the caller).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref,
+                      y_ref, state_ref, cum_ref):
+    x = x_ref[0].astype(jnp.float32)            # (L, P)
+    dt = dt_ref[0].astype(jnp.float32)          # (L,)
+    bm = b_ref[0].astype(jnp.float32)           # (L, N)
+    cm = c_ref[0].astype(jnp.float32)           # (L, N)
+    a = a_ref[0, 0]                             # scalar A (negative)
+
+    L = x.shape[0]
+    dA = dt * a                                 # (L,)
+    cum = jnp.cumsum(dA)                        # (L,)
+
+    # segsum decay matrix: seg[i, j] = exp(cum_i - cum_j) for i >= j else 0
+    diff = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    seg = jnp.exp(jnp.where(ii >= jj, diff, -jnp.inf))
+
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())))  # (L, L)
+    dx = dt[:, None] * x                                            # (L, P)
+    y = jax.lax.dot(scores * seg, dx)                               # (L, P)
+
+    # chunk-local final state: sum_j exp(cum_end - cum_j) dt_j x_j ⊗ B_j
+    w = jnp.exp(cum[-1] - cum) * dt                                 # (L,)
+    state = jax.lax.dot_general(x, bm * w[:, None],
+                                (((0,), (0,)), ((), ())))           # (P, N)
+
+    y_ref[0, ...] = y.astype(y_ref.dtype)
+    state_ref[0, 0, ...] = state
+    cum_ref[0, ...] = cum
+
+
+def _ssd_chunk_bwd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref,
+                          dy_ref, dstate_ref, dcum_ref,
+                          dx_ref, ddt_ref, db_ref, dc_ref, da_ref):
+    """Intra-chunk SSD backward. Given cotangents of (y_intra, chunk-local
+    state, cum), produce (dx, ddt, dB, dC, da) for one (batch·head, chunk)
+    tile. All L×L work is MXU matmuls; cum is recomputed in VMEM (cheaper
+    than streaming it back from HBM)."""
+    x = x_ref[0].astype(jnp.float32)            # (L, P)
+    dt = dt_ref[0].astype(jnp.float32)          # (L,)
+    bm = b_ref[0].astype(jnp.float32)           # (L, N)
+    cm = c_ref[0].astype(jnp.float32)           # (L, N)
+    a = a_ref[0, 0]
+    dy = dy_ref[0].astype(jnp.float32)          # (L, P)
+    dS = dstate_ref[0, 0].astype(jnp.float32)   # (P, N)
+    dcum = dcum_ref[0].astype(jnp.float32)      # (L,) from inter-chunk vjp
+
+    L = x.shape[0]
+    dA_ = dt * a
+    cum = jnp.cumsum(dA_)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    tri = ii >= jj
+    seg = jnp.exp(jnp.where(tri, cum[:, None] - cum[None, :], -jnp.inf))
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())))  # C·Bᵀ
+    G = scores * seg
+    dx_in = dt[:, None] * x                                          # (L,P)
+
+    # --- y_intra = G @ dx_in ---
+    dG = jax.lax.dot_general(dy, dx_in, (((1,), (1,)), ((), ())))    # (L,L)
+    d_dx = jax.lax.dot_general(G, dy, (((0,), (0,)), ((), ())))      # (L,P)
+    dGseg = dG * seg                                                 # masked
+    dc = jax.lax.dot(dGseg, bm)                                      # (L,N)
+    db = jax.lax.dot_general(dGseg, cm, (((0,), (0,)), ((), ())))    # (L,N)
+    E = dG * G                                                       # (L,L)
+    dcum = dcum + jnp.sum(E, axis=1) - jnp.sum(E, axis=0)
+
+    # --- state = Σ_j w_j x_j ⊗ B_j, w_j = exp(cum_L - cum_j)·dt_j ---
+    wexp = jnp.exp(cum[-1] - cum)                                    # (L,)
+    w = wexp * dt
+    # dw_j = x_j · (dS @ B_j);  dx_j += w_j (dS @ B_j);  dB_j += w_j (dSᵀ x_j)
+    dS_b = jax.lax.dot_general(bm, dS, (((1,), (1,)), ((), ())))     # (L,P)
+    dw = jnp.sum(x * dS_b, axis=1)                                   # (L,)
+    dx = w[:, None] * dS_b
+    db = db + w[:, None] * jax.lax.dot(x, dS)                        # (L,N)
+    dcum = dcum - dw * w
+    dcum = dcum.at[-1].add(jnp.sum(dw * w))
+    ddt = dw * wexp
+
+    # --- dx_in = dt ∘ x ---
+    ddt = ddt + jnp.sum(d_dx * x, axis=1)
+    dx = dx + dt[:, None] * d_dx
+
+    # --- cum = cumsum(dt·a): reverse-cumsum the dcum ---
+    rev = jnp.cumsum(dcum[::-1])[::-1]                               # (L,)
+    ddt = ddt + a * rev
+    da = jnp.sum(dt * rev)
+
+    dx_ref[0, ...] = dx
+    ddt_ref[0, ...] = ddt
+    db_ref[0, ...] = db
+    dc_ref[0, ...] = dc
+    da_ref[0, 0] = da
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_pallas_bwd(x, dt, A, Bm, Cm, dy, dstates, dcum, *,
+                         chunk: int = 128, interpret: bool = True):
+    """Backward of ssd_chunk_pallas. Cotangents: dy (B,S,H,P) for y_intra,
+    dstates (B,nc,H,P,N) for chunk-local states, dcum (B,S,H) for cum.
+    Returns (dx, ddt, dA, dBm, dCm) with grouped B/C gradients summed over
+    the heads sharing each group."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nc = S // chunk
+    BH = Bsz * H
+
+    xf = jnp.swapaxes(x, 1, 2).reshape(BH, S, P)
+    dtf = jnp.swapaxes(dt, 1, 2).reshape(BH, S)
+    bf = jnp.swapaxes(jnp.repeat(Bm, rep, axis=2), 1, 2).reshape(BH, S, N)
+    cf = jnp.swapaxes(jnp.repeat(Cm, rep, axis=2), 1, 2).reshape(BH, S, N)
+    af = jnp.tile(A.astype(jnp.float32)[None, :], (Bsz, 1)).reshape(BH, 1)
+    dyf = jnp.swapaxes(dy.astype(jnp.float32), 1, 2).reshape(BH, S, P)
+    dsf = jnp.swapaxes(dstates.astype(jnp.float32), 1, 2).reshape(
+        BH, nc, P, N)
+    dcf = jnp.swapaxes(dcum.astype(jnp.float32), 1, 2).reshape(BH, S)
+
+    grid = (BH, nc)
+    dx, ddt, db, dc, da = pl.pallas_call(
+        _ssd_chunk_bwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((BH, S, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH, S), jnp.float32),
+            jax.ShapeDtypeStruct((BH, S, N), jnp.float32),
+            jax.ShapeDtypeStruct((BH, S, N), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nc), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, 0)),
+            pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bh, ci: (bh, ci, 0, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, ci)),
+        ),
+        interpret=interpret,
+    )(xf, dtf, bf, cf, af, dyf, dsf, dcf)
+
+    def unflat(t, extra):
+        return jnp.swapaxes(t.reshape((Bsz, H) + extra), 1, 2)
+
+    dx_out = unflat(dx, (S, P))
+    ddt_out = unflat(ddt, (S,))
+    dA_out = jnp.sum(da.reshape(Bsz, H, nc), axis=(0, 2))
+    # grouped B/C: sum gradients over the rep heads sharing each group
+    db_out = unflat(db, (S, N)).reshape(Bsz, S, G, rep, N).sum(3)
+    dc_out = unflat(dc, (S, N)).reshape(Bsz, S, G, rep, N).sum(3)
+    return dx_out, ddt_out, dA_out, db_out, dc_out
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_pallas(x, dt, A, Bm, Cm, *, chunk: int = 128,
+                     interpret: bool = True):
+    """Intra-chunk SSD. x: (B,S,H,P); dt: (B,S,H); A: (H,);
+    Bm, Cm: (B,S,G,N) — returns (y_intra (B,S,H,P) f32,
+    states (B,nc,H,P,N) f32, cum (B,S,H) f32). S % chunk must be 0."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    BH = Bsz * H
+
+    # flatten to (B*H, S, ·) batch-head major
+    xf = jnp.swapaxes(x, 1, 2).reshape(BH, S, P)
+    dtf = jnp.swapaxes(dt, 1, 2).reshape(BH, S)
+    bf = jnp.swapaxes(jnp.repeat(Bm, rep, axis=2), 1, 2).reshape(BH, S, N)
+    cf = jnp.swapaxes(jnp.repeat(Cm, rep, axis=2), 1, 2).reshape(BH, S, N)
+    af = jnp.tile(A.astype(jnp.float32)[None, :], (Bsz, 1)).reshape(BH, 1)
+
+    grid = (BH, nc)
+    y, states, cum = pl.pallas_call(
+        _ssd_chunk_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((BH, S, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nc, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((BH, S), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bh, ci: (bh, ci, 0, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ci: (bh, ci)),
+        ),
+        interpret=interpret,
+    )(xf, dtf, bf, cf, af)
+
+    y = jnp.swapaxes(y.reshape(Bsz, H, S, P), 1, 2)
+    states = jnp.swapaxes(states.reshape(Bsz, H, nc, P, N), 1, 2)
+    cum = jnp.swapaxes(cum.reshape(Bsz, H, S), 1, 2)
+    return y, states, cum

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the Mamba-2 SSD scan: the literal sequential recurrence.
+
+    s_t = exp(dt_t * A) * s_{t-1} + dt_t * (x_t ⊗ B_t)
+    y_t = (s_t @ C_t) + D * x_t
+
+Slow (O(S) sequential) but unambiguous; ground truth for kernel tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm, D=None, init_state=None):
+    """x: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B,S,G,N) with H % G == 0; D: (H,) or None.
+    Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32)."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)   # (B,S,H,N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp                      # (B,H,P),(B,H),(B,H,N),(B,H,N)
+        decay = jnp.exp(dtt * A)[..., None, None]  # (B,H,1,1)
+        s = decay * s + dtt[..., None, None] * xt[..., None] * bt[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", s, ct)
+        return s, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    s, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                     # (B,S,H,P)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y, s
+
+
+def ssd_decode_ref(x, dt, A, Bm, Cm, D, state):
+    """Single-token decode. x: (B,H,P); dt: (B,H); Bm,Cm: (B,G,N);
+    state: (B,H,P,N). Returns (y (B,H,P), new_state)."""
+    H = x.shape[1]
+    rep = H // Bm.shape[1]
+    bt = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)
+    ct = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A)[..., None, None]
+    state = decay * state + dtf[..., None, None] * xf[..., None] * bt[..., None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, :, None] * xf
+    return y.astype(x.dtype), state

@@ -1,0 +1,1 @@
+from repro.kernels.swa_avg.ops import running_average, running_average_tree

@@ -1,0 +1,25 @@
+"""Public streaming-average op, scalar-leaf and pytree forms."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.swa_avg.kernel import running_average_pallas
+from repro.kernels.swa_avg.ref import running_average_ref
+
+
+def running_average(avg, w, n, *, impl: str = "reference"):
+    """avg' = avg + (w - avg)/(n+1) for one array."""
+    if impl == "pallas":
+        flat = running_average_pallas(avg.reshape(-1), w.reshape(-1),
+                                      jnp.asarray(n, jnp.float32))
+        return flat.reshape(avg.shape)
+    if impl in ("reference", "naive"):
+        return running_average_ref(avg, w, n)
+    raise ValueError(f"unknown swa_avg impl {impl!r}")
+
+
+def running_average_tree(avg_tree, w_tree, n, *, impl: str = "reference"):
+    """Streaming average applied leaf-wise to parameter pytrees."""
+    return jax.tree_util.tree_map(
+        lambda a, w: running_average(a, w, n, impl=impl), avg_tree, w_tree)

@@ -1,0 +1,14 @@
+"""Oracle for the streaming weight average: avg' = avg + (w - avg) / (n + 1).
+
+This is the phase-3 / SWA hot loop (Izmailov et al. 2018 eq. for the running
+mean); exactly equal to the arithmetic mean of the n+1 models seen so far.
+"""
+import jax.numpy as jnp
+
+
+def running_average_ref(avg, w, n):
+    """avg, w: same-shape arrays; n: scalar count of models already in avg."""
+    nf = jnp.asarray(n, jnp.float32)
+    return (avg.astype(jnp.float32)
+            + (w.astype(jnp.float32) - avg.astype(jnp.float32)) / (nf + 1.0)
+            ).astype(avg.dtype)

@@ -1,0 +1,100 @@
+"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b \
+      [--batch 8] [--prompt-len 64] [--new-tokens 32] [--ckpt model.ckpt]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.io import load_pytree
+from repro.configs import registry
+from repro.models.model import Model
+
+
+def generate(model: Model, params, prompts, new_tokens: int,
+             extras=None, greedy: bool = True, rng=None):
+    """Batched greedy/sampled generation. prompts: (B, S) int32."""
+    extras = extras or {}
+    B, S = prompts.shape
+    cache_len = S + new_tokens
+    prefill = jax.jit(lambda p, t: model.prefill(p, t, cache_len=cache_len,
+                                                 **extras))
+    decode = jax.jit(lambda p, c, t, i: model.decode(p, c, t, i))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    tokens = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(new_tokens):
+        tokens.append(tok)
+        logits, cache = decode(params, cache, tok, S + i)
+        if greedy or rng is None:
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        else:
+            rng, k = jax.random.split(rng)
+            tok = jax.random.categorical(k, logits)[:, None].astype(jnp.int32)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+    out = jnp.concatenate(tokens, axis=1)
+    return out, {"prefill_s": t_prefill, "decode_s": t_decode,
+                 "tokens_per_s": B * new_tokens / max(t_decode, 1e-9)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b",
+                    choices=registry.list_archs())
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8-quantized KV cache (halves cache memory)")
+    args = ap.parse_args()
+
+    cfg = (registry.get_config(args.arch) if args.full
+           else registry.get_smoke_config(args.arch))
+    if args.kv_int8:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    model = Model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+    if args.ckpt:
+        params = load_pytree(args.ckpt, params)
+        print(f"restored {args.ckpt}")
+
+    B = args.batch
+    prompts = jax.random.randint(key, (B, args.prompt_len), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    extras = {}
+    if cfg.family == "vlm":
+        extras["vision_embeds"] = jax.random.normal(
+            key, (B, cfg.n_vision_tokens, cfg.d_model), model.dtype)
+    if cfg.family == "audio":
+        extras["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), model.dtype)
+
+    out, stats = generate(model, params, prompts, args.new_tokens,
+                          extras=extras)
+    print(f"arch={cfg.name} batch={B} prompt={args.prompt_len} "
+          f"new={args.new_tokens}")
+    print(f"prefill {stats['prefill_s']*1e3:.1f} ms, decode "
+          f"{stats['decode_s']*1e3:.1f} ms "
+          f"({stats['tokens_per_s']:.1f} tok/s)")
+    print("first sequences:", out[:2, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

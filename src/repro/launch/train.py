@@ -1,0 +1,108 @@
+"""SWAP training launcher.
+
+Runs the full three-phase SWAP schedule on an LM architecture (smoke-sized
+by default so it executes on this host; full configs are exercised via the
+dry-run). The same controller drives the TPU path: phase 1 on the
+('data','model') mesh, phase 2 on ('worker','data','model').
+
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+      [--full] [--workers 4] [--phase1-steps 150] [--phase2-steps 60] \
+      [--stop-acc 0.6] [--optimizer sgd|lars|adamw] [--save out.ckpt]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.checkpoint.io import save_pytree
+from repro.configs import registry
+from repro.configs.base import (OptimizerConfig, PhaseConfig, ScheduleConfig,
+                                SWAPConfig)
+from repro.core.adapters import LMAdapter
+from repro.core.swap import SWAP
+from repro.data.pipeline import Loader, make_markov_lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b",
+                    choices=registry.list_archs())
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (assigned) config instead of smoke")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--phase1-steps", type=int, default=150)
+    ap.add_argument("--phase2-steps", type=int, default=60)
+    ap.add_argument("--phase1-batch", type=int, default=256)
+    ap.add_argument("--phase2-batch", type=int, default=32)
+    ap.add_argument("--stop-acc", type=float, default=0.55)
+    ap.add_argument("--peak-lr", type=float, default=0.5)
+    ap.add_argument("--optimizer", default="sgd",
+                    choices=["sgd", "lars", "adamw"])
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save", default="")
+    ap.add_argument("--json-out", default="")
+    args = ap.parse_args()
+
+    cfg = (registry.get_config(args.arch) if args.full
+           else registry.get_smoke_config(args.arch))
+    if cfg.family == "cnn":
+        raise SystemExit("use benchmarks/table1_cifar10.py for the CNN")
+
+    data = make_markov_lm(args.seed, vocab=min(cfg.vocab_size, 512),
+                          n_train=4096, n_test=1024, seq_len=args.seq_len)
+    train = {"tokens": data["train_tokens"] % cfg.vocab_size,
+             "labels": data["train_labels"] % cfg.vocab_size}
+    test_loader = Loader({"tokens": data["test_tokens"] % cfg.vocab_size,
+                          "labels": data["test_labels"] % cfg.vocab_size},
+                         256)
+
+    lr_small = args.peak_lr * args.phase2_batch / args.phase1_batch
+    opt = OptimizerConfig(kind=args.optimizer,
+                          weight_decay=5e-4 if args.optimizer != "adamw"
+                          else 0.01)
+    if args.optimizer == "adamw":
+        args.peak_lr, lr_small = 3e-3, 1e-3
+    adapter = LMAdapter(cfg, opt)
+    swap_cfg = SWAPConfig(
+        n_workers=args.workers,
+        phase1=PhaseConfig(
+            batch_size=args.phase1_batch, max_steps=args.phase1_steps,
+            stop_accuracy=args.stop_acc,
+            schedule=ScheduleConfig(kind="warmup_linear", peak_lr=args.peak_lr,
+                                    warmup_steps=args.phase1_steps // 5,
+                                    total_steps=args.phase1_steps)),
+        phase2=PhaseConfig(
+            batch_size=args.phase2_batch, max_steps=args.phase2_steps,
+            schedule=ScheduleConfig(kind="warmup_linear", peak_lr=lr_small,
+                                    warmup_steps=0,
+                                    total_steps=args.phase2_steps)),
+        seed=args.seed)
+
+    n_params = cfg.param_count()
+    print(f"arch={cfg.name} family={cfg.family} params={n_params/1e6:.1f}M "
+          f"workers={args.workers}")
+    t0 = time.time()
+    res = SWAP(adapter, swap_cfg, train, test_loader).run(
+        jax.random.PRNGKey(args.seed))
+    out = {k: v for k, v in res.items()
+           if isinstance(v, (int, float, list)) and k != "phase1_log"}
+    out["wall_s"] = time.time() - t0
+    print(json.dumps({k: v for k, v in out.items()
+                      if not isinstance(v, list)}, indent=1))
+    print(f"worker accs: {['%.4f' % a for a in res['worker_test_accs']]}")
+    print(f"SWAP: before avg {res['before_avg_test_acc']:.4f} -> "
+          f"after avg {res['after_avg_test_acc']:.4f}")
+    if args.save:
+        save_pytree(args.save, res["final_bundle"]["params"])
+        print(f"saved averaged model to {args.save}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Paper-faithful CIFAR-analog CNN with BatchNorm (davidcpage/cifar10-fast
+ResNet9 style, the model the SWAP paper trains).
+
+Functional BN: ``apply`` returns the per-batch statistics so phase 3 of SWAP
+can recompute running statistics for the *averaged* weights — Algorithm 1
+line 28 of the paper. ``state`` holds the running (mean, var) used at eval.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _conv_init(key, shape):
+    fan_in = shape[0] * shape[1] * shape[2]
+    return jax.random.normal(key, shape) * (2.0 / fan_in) ** 0.5
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def init_cnn(key, cfg: ModelConfig):
+    chans = cfg.cnn_channels
+    params, state = {}, {}
+    prev = 3
+    keys = jax.random.split(key, 2 * len(chans) + 4 + 1)
+    ki = 0
+
+    def add_conv_bn(name, cin, cout):
+        nonlocal ki
+        params[name] = {
+            "w": _conv_init(keys[ki], (3, 3, cin, cout)),
+            "scale": jnp.ones((cout,)), "bias": jnp.zeros((cout,)),
+        }
+        state[name] = {"mean": jnp.zeros((cout,)), "var": jnp.ones((cout,))}
+        ki += 1
+
+    for i, c in enumerate(chans):
+        add_conv_bn(f"conv{i}", prev, c)
+        # residual pair on the 2nd and last stages (resnet9 pattern)
+        if i in (1, len(chans) - 1):
+            add_conv_bn(f"res{i}a", c, c)
+            add_conv_bn(f"res{i}b", c, c)
+        prev = c
+    params["fc"] = {"w": jax.random.normal(keys[ki], (prev, cfg.n_classes)) * 0.01}
+    return params, state
+
+
+def _bn(p, s, x, train: bool, momentum: float = 0.9):
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+    else:
+        mean, var = s["mean"], s["var"]
+    y = (x - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    if train:
+        new_s = {"mean": momentum * s["mean"] + (1 - momentum) * mean,
+                 "var": momentum * s["var"] + (1 - momentum) * var}
+    else:
+        new_s = s
+    return y, new_s
+
+
+def apply_cnn(params, state, x, cfg: ModelConfig, train: bool):
+    """x: (B, H, W, 3). Returns (logits (B, n_classes), new_state)."""
+    chans = cfg.cnn_channels
+    new_state = {}
+
+    def conv_bn(name, h):
+        y = _conv(h, params[name]["w"])
+        y, new_state[name] = _bn(params[name], state[name], y, train)
+        return jax.nn.relu(y)
+
+    h = x
+    for i, c in enumerate(chans):
+        h = conv_bn(f"conv{i}", h)
+        if i > 0:
+            h = _maxpool(h)
+        if i in (1, len(chans) - 1):
+            r = conv_bn(f"res{i}a", h)
+            r = conv_bn(f"res{i}b", r)
+            h = h + r
+    h = jnp.max(h, axis=(1, 2))                       # global max pool
+    logits = h @ params["fc"]["w"] * 0.125            # cifar10-fast scale
+    return logits, new_state
+
+
+def cnn_batch_stats(params, x, cfg: ModelConfig):
+    """One forward pass collecting raw batch statistics per BN layer —
+    used by SWAP phase 3 to rebuild running stats for averaged weights."""
+    stats = {}
+
+    def conv_bn(name, h):
+        y = _conv(h, params[name]["w"])
+        mean = jnp.mean(y, axis=(0, 1, 2))
+        var = jnp.var(y, axis=(0, 1, 2))
+        stats[name] = {"mean": mean, "var": var}
+        y = (y - mean) * jax.lax.rsqrt(var + 1e-5) * params[name]["scale"] \
+            + params[name]["bias"]
+        return jax.nn.relu(y)
+
+    chans = cfg.cnn_channels
+    h = x
+    for i, c in enumerate(chans):
+        h = conv_bn(f"conv{i}", h)
+        if i > 0:
+            h = _maxpool(h)
+        if i in (1, len(chans) - 1):
+            r = conv_bn(f"res{i}a", h)
+            r = conv_bn(f"res{i}b", r)
+            h = h + r
+    return stats

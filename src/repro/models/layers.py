@@ -1,0 +1,159 @@
+"""Shared layer primitives: inits, norms, RoPE (incl. M-RoPE), MLP, embeds."""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape: Tuple[int, ...], fan_in: int | None = None,
+               dtype=jnp.float32):
+    """Truncated-normal with 1/sqrt(fan_in) scale (LeCun normal)."""
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# mixed-precision matmul helper
+# ---------------------------------------------------------------------------
+
+
+def mdot(x, w, dtype):
+    """Matmul with explicit compute dtype (params stay f32 in HBM)."""
+    return jnp.matmul(x.astype(dtype), w.astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(key, d: int, kind: str):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * params["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return out.astype(x.dtype)
+
+
+def gated_rmsnorm(x, z, scale, eps: float = 1e-6):
+    """Mamba-2 RMSNormGated: norm(x * silu(z)) * scale."""
+    xf = (x * jax.nn.silu(z)).astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    """Inverse frequencies for the half-dim."""
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float,
+                 mrope_sections: Tuple[int, ...] = ()):
+    """positions: (..., S) int for standard rope, or (..., 3, S) for M-RoPE.
+    Returns (cos, sin) with shape (..., S, head_dim//2)."""
+    inv = rope_freqs(head_dim, theta)
+    if mrope_sections:
+        # positions (..., 3, S): section i of the half-dim uses component i
+        assert positions.shape[-2] == len(mrope_sections)
+        parts = []
+        off = 0
+        for i, sec in enumerate(mrope_sections):
+            ang = positions[..., i, :, None].astype(jnp.float32) * inv[off:off + sec]
+            parts.append(ang)
+            off += sec
+        ang = jnp.concatenate(parts, axis=-1)            # (..., S, half)
+    else:
+        ang = positions[..., :, None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (B, S, D//2) or (S, D//2).
+    Llama-style rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None]
+        sin = sin[None]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_embedding(positions, d_model: int):
+    """Whisper-style fixed sinusoidal embeddings. positions: (S,) or (B,S)."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, (d_model, d_ff)),
+        "wg": dense_init(k2, (d_model, d_ff)),
+        "wo": dense_init(k3, (d_ff, d_model), fan_in=d_ff),
+    }
+
+
+def apply_mlp(params, x, act: str, dtype):
+    h = mdot(x, params["wi"], dtype)
+    g = mdot(x, params["wg"], dtype)
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return mdot(h * g, params["wo"], dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d_model: int):
+    return {"table": embed_init(key, (vocab, d_model))}
+
+
+def embed_tokens(params, tokens, dtype):
+    return params["table"].astype(dtype)[tokens]
+
+
+def lm_head(params, h, dtype):
+    """h @ table^T when tied; separate head otherwise (callers pick)."""
+    return mdot(h, params["w"], dtype)

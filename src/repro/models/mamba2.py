@@ -1,0 +1,151 @@
+"""Mamba-2 block (SSD): in_proj -> causal depthwise conv -> SSD scan ->
+gated RMSNorm -> out_proj.  Train/prefill use the chunked SSD (Pallas on
+TPU); decode keeps a (conv window, SSD state) cache — O(1) per token, which
+is why the SSM archs run the `long_500k` shape.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.ssd.ops import ssd_decode, ssd_scan
+from repro.models.layers import dense_init, gated_rmsnorm, mdot
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, nh, conv_dim
+
+
+def init_mamba(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    # dt bias init so softplus(dt_bias) spans [dt_min, dt_max] (mamba2 init)
+    u = jax.random.uniform(ks[3], (nh,))
+    dt = jnp.exp(u * (math.log(s.dt_max) - math.log(s.dt_min))
+                 + math.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))        # inverse softplus
+    a0, a1 = s.a_init_range
+    A = jax.random.uniform(ks[4], (nh,), minval=a0, maxval=a1)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * s.n_groups * s.d_state + nh)),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_dim), fan_in=s.d_conv),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(A).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_in, d), fan_in=d_in),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    s = cfg.ssm
+    d_in, nh, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:d_in + d_in + 2 * gn]
+    dt_raw = proj[..., d_in + d_in + 2 * gn:]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc, w, b, dtype):
+    """Depthwise causal conv via shifted adds (d_conv is tiny)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    S = xbc.shape[1]
+    out = b.astype(dtype)
+    acc = jnp.zeros_like(xbc)
+    for i in range(K):
+        acc = acc + w[i].astype(dtype) * pad[:, i:i + S]
+    return jax.nn.silu(acc + out)
+
+
+def mamba_forward(params, u, cfg: ModelConfig, *, return_cache: bool = False,
+                  init_cache=None):
+    """u: (B,S,d). Returns out or (out, cache{conv, state})."""
+    s = cfg.ssm
+    dtype = u.dtype
+    B, S, d = u.shape
+    d_in, nh, conv_dim = _dims(cfg)
+    gn = s.n_groups * s.d_state
+
+    proj = mdot(u, params["in_proj"], dtype)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+
+    if init_cache is not None:
+        # prepend cached conv window (chunked prefill continuation)
+        xbc_in = jnp.concatenate([init_cache["conv"].astype(dtype), xbc], axis=1)
+        conv = _causal_conv(xbc_in, params["conv_w"], params["conv_b"], dtype)
+        conv = conv[:, init_cache["conv"].shape[1]:]
+    else:
+        conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], dtype)
+
+    x = conv[..., :d_in].reshape(B, S, nh, s.head_dim)
+    Bm = conv[..., d_in:d_in + gn].reshape(B, S, s.n_groups, s.d_state)
+    Cm = conv[..., d_in + gn:].reshape(B, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    y, final_state = ssd_scan(
+        x, dt, A, Bm, Cm, params["D"],
+        init_state=None if init_cache is None else init_cache["state"],
+        chunk=s.chunk_size, impl=cfg.ssd_impl)
+    y = y.astype(dtype).reshape(B, S, d_in)
+    y = gated_rmsnorm(y, z, params["norm_scale"], cfg.norm_eps)
+    out = mdot(y, params["out_proj"], dtype)
+    if not return_cache:
+        return out
+    conv_cache = xbc[:, -(s.d_conv - 1):] if S >= s.d_conv - 1 else jnp.pad(
+        xbc, ((0, 0), (s.d_conv - 1 - S, 0), (0, 0)))
+    return out, {"conv": conv_cache, "state": final_state}
+
+
+def mamba_decode(params, u, cache, cfg: ModelConfig):
+    """One-token decode. u: (B,1,d); cache{conv (B,K-1,conv_dim),
+    state (B,nh,P,N)}. Returns (out, new_cache)."""
+    s = cfg.ssm
+    dtype = u.dtype
+    B = u.shape[0]
+    d_in, nh, conv_dim = _dims(cfg)
+    gn = s.n_groups * s.d_state
+
+    proj = mdot(u, params["in_proj"], dtype)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = xbc[:, 0]                                       # (B, conv_dim)
+
+    w = params["conv_w"].astype(dtype)                    # (K, conv_dim)
+    hist = cache["conv"].astype(dtype)                    # (B, K-1, conv_dim)
+    conv = jnp.sum(w[:-1][None] * hist, axis=1) + w[-1][None] * xbc
+    conv = jax.nn.silu(conv + params["conv_b"].astype(dtype))
+    new_conv = jnp.concatenate([hist[:, 1:], xbc[:, None]], axis=1)
+
+    x = conv[..., :d_in].reshape(B, nh, s.head_dim)
+    Bm = conv[..., d_in:d_in + gn].reshape(B, s.n_groups, s.d_state)
+    Cm = conv[..., d_in + gn:].reshape(B, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    y, new_state = ssd_decode(x, dt, A, Bm, Cm, params["D"], cache["state"])
+    y = y.astype(dtype).reshape(B, 1, d_in)
+    y = gated_rmsnorm(y, z, params["norm_scale"], cfg.norm_eps)
+    out = mdot(y, params["out_proj"], dtype)
+    return out, {"conv": new_conv.astype(cache["conv"].dtype),
+                 "state": new_state}
+
+
+def mamba_empty_cache(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_in, nh, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }

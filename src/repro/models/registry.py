@@ -1,0 +1,12 @@
+"""Build a model (or the CNN) from a ModelConfig."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "cnn":
+        raise ValueError(
+            "cnn family uses repro.models.cnn functional API, not Model")
+    return Model(cfg)

@@ -1,0 +1,1 @@
+from repro.optim.api import init_optimizer

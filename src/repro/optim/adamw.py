@@ -1,0 +1,33 @@
+"""AdamW — beyond-paper optimizer for the LM architectures (the paper's CNN
+experiments use SGD; transformer pretraining convention is AdamW)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"mu": z, "nu": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def update(grads, state, params, lr, cfg: OptimizerConfig):
+    b1, b2, eps, wd = cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay
+    count = state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def leaf(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        step = (mu / c1) / (jnp.sqrt(nu / c2) + eps) + wd * p
+        return p - lr * step, mu, nu
+
+    flat = jax.tree_util.tree_map(leaf, grads, state["mu"], state["nu"], params)
+    get = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return get(0), {"mu": get(1), "nu": get(2), "count": count}

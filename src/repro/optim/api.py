@@ -1,0 +1,20 @@
+"""Optimizer factory: (init_fn, update_fn) pairs keyed by OptimizerConfig."""
+from __future__ import annotations
+
+from repro.configs.base import OptimizerConfig
+from repro.optim import adamw, lars, sgd
+
+_MODS = {"sgd": sgd, "lars": lars, "adamw": adamw}
+
+
+def init_optimizer(cfg: OptimizerConfig):
+    """Returns (init_fn(params)->state, update_fn(grads, state, params, lr)
+    -> (new_params, new_state))."""
+    mod = _MODS.get(cfg.kind)
+    if mod is None:
+        raise ValueError(f"unknown optimizer {cfg.kind!r}")
+
+    def update_fn(grads, state, params, lr):
+        return mod.update(grads, state, params, lr, cfg)
+
+    return mod.init, update_fn

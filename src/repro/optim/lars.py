@@ -1,0 +1,41 @@
+"""LARS (You et al. 2017) — layer-wise adaptive rate scaling.
+
+The SWAP paper (§6) names LARS as the natural drop-in for phase 1 to push
+the large-batch phase further; we provide it as a first-class optimizer.
+1-D parameters (norm scales, biases) skip the adaptive scaling, per the
+LARS convention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def init(params):
+    return {"mu": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+
+def update(grads, state, params, lr, cfg: OptimizerConfig):
+    m, wd, tc = cfg.momentum, cfg.weight_decay, cfg.trust_coefficient
+
+    def leaf(g, buf, p):
+        g = g.astype(jnp.float32)
+        d = g + wd * p
+        if p.ndim > 1:
+            p_norm = jnp.linalg.norm(p)
+            d_norm = jnp.linalg.norm(d)
+            trust = jnp.where(
+                (p_norm > 0) & (d_norm > 0), tc * p_norm / (d_norm + 1e-12), 1.0)
+            d = d * trust
+        buf = m * buf + d
+        step = d + m * buf if cfg.nesterov else buf
+        return p - lr * step, buf
+
+    flat = jax.tree_util.tree_map(leaf, grads, state["mu"], params)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"mu": new_mu}

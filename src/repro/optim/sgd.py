@@ -1,0 +1,33 @@
+"""SGD with (Nesterov) momentum and decoupled-from-schedule weight decay —
+the paper's optimizer (momentum 0.9, wd 5e-4, PyTorch update convention so
+the paper's hyper-parameters transfer)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def init(params):
+    return {"mu": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+
+def update(grads, state, params, lr, cfg: OptimizerConfig):
+    """Returns (new_params, new_state). L2-style weight decay folded into the
+    gradient (the paper's setting), not AdamW-style decoupled decay."""
+    m, wd = cfg.momentum, cfg.weight_decay
+
+    def leaf(g, buf, p):
+        g = g.astype(jnp.float32)
+        d = g + wd * p
+        buf = m * buf + d
+        step = d + m * buf if cfg.nesterov else buf
+        return p - lr * step, buf
+
+    flat = jax.tree_util.tree_map(leaf, grads, state["mu"], params)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"mu": new_mu}

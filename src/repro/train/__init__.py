@@ -1,0 +1,4 @@
+from repro.train.steps import (
+    lm_loss_and_metrics, make_decode_fn, make_lm_eval_fn, make_lm_train_step,
+    make_prefill_fn,
+)

@@ -1,0 +1,91 @@
+"""Step factories: training, eval, prefill, decode.
+
+All steps are pure functions (params, ...) -> (params, ...) suitable for
+jax.jit with explicit in/out shardings; the SWAP controller and the dry-run
+both consume them.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, OptimizerConfig
+from repro.models.model import Model
+from repro.optim.api import init_optimizer
+
+
+def lm_loss_and_metrics(model: Model, params, batch: Dict):
+    """Cross-entropy next-token loss + router aux; metrics incl. accuracy
+    (the paper's phase-1 stopping criterion is TRAIN accuracy)."""
+    logits, aux = model.apply(
+        params, batch["tokens"],
+        vision_embeds=batch.get("vision_embeds"),
+        frames=batch.get("frames"))
+    labels = batch["labels"]
+    # CE without take_along_axis / full f32 logits: gathers over a
+    # vocab-sharded logits tensor force GSPMD all-gathers (§Perf iter 1);
+    # the masked reduction keeps every op vocab-shardable.
+    logits_f = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits_f, axis=-1, keepdims=True))
+    shifted = logits_f - m
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    V = logits.shape[-1]
+    label_mask = (jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                           logits.ndim - 1)
+                  == labels[..., None])
+    l_y = jnp.sum(jnp.where(label_mask, shifted, 0.0), axis=-1)
+    nll = logz - l_y
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits_f, axis=-1) == labels)
+                   .astype(jnp.float32))
+    total = loss + aux
+    return total, {"loss": loss, "aux": aux, "accuracy": acc}
+
+
+def make_lm_train_step(model: Model, opt_cfg: OptimizerConfig,
+                       schedule_fn: Callable):
+    """Returns (opt_init, train_step). train_step: (params, opt_state,
+    batch, step) -> (params, opt_state, metrics)."""
+    opt_init, opt_update = init_optimizer(opt_cfg)
+    grad_dtype = jnp.dtype(opt_cfg.grad_dtype)
+
+    def train_step(params, opt_state, batch, step):
+        def loss_fn(p):
+            return lm_loss_and_metrics(model, p, batch)
+
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        if grad_dtype != jnp.float32:
+            # reduced-precision gradient all-reduce (beyond-paper knob):
+            # the data-axis psum happens on these casted leaves.
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(grad_dtype), grads)
+        lr = schedule_fn(step)
+        new_params, new_opt = opt_update(grads, opt_state, params, lr)
+        metrics = dict(metrics, lr=lr)
+        return new_params, new_opt, metrics
+
+    return opt_init, train_step
+
+
+def make_lm_eval_fn(model: Model):
+    def eval_fn(params, batch):
+        _, metrics = lm_loss_and_metrics(model, params, batch)
+        return metrics
+    return eval_fn
+
+
+def make_prefill_fn(model: Model, cache_len: int | None = None):
+    def prefill(params, batch):
+        return model.prefill(
+            params, batch["tokens"], cache_len=cache_len,
+            vision_embeds=batch.get("vision_embeds"),
+            frames=batch.get("frames"))
+    return prefill
+
+
+def make_decode_fn(model: Model):
+    def decode(params, cache, token, pos):
+        return model.decode(params, cache, token, pos)
+    return decode

@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the host's real device view (1 CPU device). Only the dry-run
+# entrypoint forces 512 fake devices — importing repro.launch.dryrun during
+# pytest collection must NOT flip the whole test process to 512 devices
+# (dryrun uses setdefault, so pinning XLA_FLAGS here wins).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=1"
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

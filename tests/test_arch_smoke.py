@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests: REDUCED configs (2 layers, d_model<=512,
+<=4 experts), one forward + one train step + prefill/decode consistency on
+CPU. Shapes and finiteness asserted; the FULL configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import OptimizerConfig, ScheduleConfig, replace
+from repro.core.schedules import schedule_fn
+from repro.models.model import Model
+from repro.train.steps import make_lm_train_step
+
+ARCHS = registry.ASSIGNED_ARCHS + registry.BONUS_ARCHS
+
+
+def _extras(cfg, key, B):
+    extras = {}
+    if cfg.family == "vlm":
+        extras["vision_embeds"] = jax.random.normal(
+            key, (B, cfg.n_vision_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        extras["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model))
+    return extras
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_config_is_reduced(arch):
+    cfg = registry.get_smoke_config(arch)
+    assert cfg.n_layers <= 4
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch, key):
+    cfg = registry.get_smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(key)
+    B, S = 2, 32
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits, aux = model.apply(params, tokens, **_extras(cfg, key, B))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch, key):
+    cfg = registry.get_smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(key)
+    opt_init, step_fn = make_lm_train_step(
+        model, OptimizerConfig(kind="sgd"),
+        schedule_fn(ScheduleConfig(kind="const", peak_lr=0.01)))
+    opt_state = opt_init(params)
+    B, S = 2, 32
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        **_extras(cfg, key, B),
+    }
+    new_params, _, metrics = jax.jit(step_fn)(params, opt_state, batch, 0)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # parameters actually moved
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), params, new_params)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+    # everything stayed finite
+    for leaf in jax.tree_util.tree_leaves(new_params):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch, key):
+    """decode(prefill(t[:S]), t[S:]) must reproduce apply(t) logits.
+    MoE archs use a no-drop capacity factor so token dropping can't differ
+    between the full and incremental paths."""
+    cfg = registry.get_smoke_config(arch)
+    if cfg.moe:
+        cfg = replace(cfg, **{"moe.capacity_factor":
+                              float(cfg.moe.n_experts / cfg.moe.top_k) * 1.1})
+    model = Model(cfg)
+    params = model.init(key)
+    B, S, T = 2, 24, 3
+    tokens = jax.random.randint(key, (B, S + T), 0, cfg.vocab_size)
+    extras = _extras(cfg, key, B)
+    logits_full, _ = model.apply(params, tokens, **extras)
+    lp, cache = model.prefill(params, tokens[:, :S], cache_len=S + T,
+                              **extras)
+    np.testing.assert_allclose(np.asarray(lp),
+                               np.asarray(logits_full[:, S - 1]),
+                               atol=2e-4, rtol=2e-3)
+    for t in range(T):
+        ld, cache = model.decode(params, cache, tokens[:, S + t][:, None],
+                                 S + t)
+        np.testing.assert_allclose(np.asarray(ld),
+                                   np.asarray(logits_full[:, S + t]),
+                                   atol=2e-4, rtol=2e-3)
+
+
+def test_sliding_window_cache_is_small():
+    """gemma3 local layers must hold window-sized caches (the long_500k
+    memory story)."""
+    cfg = registry.get_smoke_config("gemma3-1b")
+    model = Model(cfg)
+    cache = jax.eval_shape(lambda: model.empty_cache(2, 4096))
+    sizes = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        p = "/".join(str(getattr(q, "key", q)) for q in path)
+        sizes[p] = leaf.shape
+    # unit kind 0 = local (window), kind 1 = global (full)
+    local_k = [v for k, v in sizes.items() if k.startswith("units/0/a/k")]
+    global_k = [v for k, v in sizes.items() if k.startswith("units/1/a/k")]
+    assert local_k[0][2] == cfg.sliding_window
+    assert global_k[0][2] == 4096
+
+
+def test_param_counts_match_analytic():
+    """init() parameter count ~= ModelConfig.param_count() (within ties,
+    norms, and small vectors — 2%)."""
+    for arch in ARCHS:
+        cfg = registry.get_smoke_config(arch)
+        model = Model(cfg)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(l.shape))
+                     for l in jax.tree_util.tree_leaves(params))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.05, \
+            (arch, actual, analytic)

@@ -1,0 +1,33 @@
+"""Train-time augmentation: determinism, cutout, loader integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.augment import augment_images
+from repro.data.pipeline import Loader
+
+
+def test_deterministic_per_seed():
+    imgs = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 8, 3))
+    a1 = augment_images(imgs, jnp.int32(7))
+    a2 = augment_images(imgs, jnp.int32(7))
+    a3 = augment_images(imgs, jnp.int32(8))
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    assert np.abs(np.asarray(a1) - np.asarray(a3)).max() > 0
+
+
+def test_cutout_zeros_a_square():
+    imgs = jnp.ones((2, 8, 8, 3))
+    out = np.asarray(augment_images(imgs, jnp.int32(3), noise=0.0, cutout=4))
+    for b in range(2):
+        zeros = (out[b] == 0.0).all(-1)
+        assert zeros.sum() == 16       # one 4x4 square per sample
+
+
+def test_loader_emits_aug_seed():
+    loader = Loader({"y": np.arange(32)}, 8, seed=1)
+    b0 = loader.batch(0, worker=0)
+    b1 = loader.batch(0, worker=1)
+    assert "aug_seed" in b0
+    assert int(b0["aug_seed"]) != int(b1["aug_seed"])
+    assert int(b0["aug_seed"]) == int(loader.batch(0, worker=0)["aug_seed"])

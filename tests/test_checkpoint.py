@@ -1,0 +1,43 @@
+"""Checkpoint round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import load_pytree, save_pytree
+from repro.configs import registry
+from repro.models.model import Model
+
+
+def test_roundtrip_simple(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                       "c": jnp.asarray(3)}}
+    p = str(tmp_path / "ckpt.msgpack")
+    save_pytree(p, tree)
+    out = load_pytree(p, tree)
+    for (k1, l1), (k2, l2) in zip(
+            jax.tree_util.tree_flatten_with_path(tree)[0],
+            jax.tree_util.tree_flatten_with_path(out)[0]):
+        assert l1.dtype == l2.dtype
+        np.testing.assert_array_equal(np.asarray(l1, np.float32),
+                                      np.asarray(l2, np.float32))
+
+
+def test_roundtrip_model_params(tmp_path):
+    cfg = registry.get_smoke_config("gemma3-1b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    p = str(tmp_path / "model.msgpack")
+    save_pytree(p, params)
+    out = load_pytree(p, params)
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), params, out)
+    assert max(jax.tree_util.tree_leaves(diffs)) == 0.0
+
+
+def test_missing_leaf_raises(tmp_path):
+    p = str(tmp_path / "ckpt.msgpack")
+    save_pytree(p, {"a": jnp.ones(3)})
+    with pytest.raises(KeyError):
+        load_pytree(p, {"a": jnp.ones(3), "b": jnp.ones(2)})

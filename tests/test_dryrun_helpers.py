@@ -1,0 +1,66 @@
+"""Dry-run helpers that don't need 512 devices: input specs, FLOP
+accounting, shape applicability."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, registry, shape_applicable
+from repro.launch.dryrun import input_specs, model_flops
+
+
+def test_input_specs_train():
+    cfg = registry.get_config("internlm2-1.8b")
+    specs = input_specs(cfg, SHAPES["train_4k"])
+    assert specs["tokens"].shape == (256, 4096)
+    assert specs["labels"].shape == (256, 4096)
+    assert specs["tokens"].dtype == jnp.int32
+
+
+def test_input_specs_decode_is_one_token():
+    cfg = registry.get_config("qwen2.5-14b")
+    specs = input_specs(cfg, SHAPES["decode_32k"])
+    assert specs["tokens"].shape == (128, 1)
+    assert "labels" not in specs
+
+
+def test_input_specs_modality_stubs():
+    vlm = registry.get_config("qwen2-vl-72b")
+    s = input_specs(vlm, SHAPES["prefill_32k"])
+    assert s["vision_embeds"].shape == (32, vlm.n_vision_tokens, vlm.d_model)
+    audio = registry.get_config("whisper-base")
+    s = input_specs(audio, SHAPES["train_4k"])
+    assert s["frames"].shape == (256, audio.encoder_seq, audio.d_model)
+
+
+def test_model_flops_train_vs_decode():
+    cfg = registry.get_config("internlm2-1.8b")
+    train = model_flops(cfg, SHAPES["train_4k"])
+    # 6·N·D for training
+    assert train == pytest.approx(
+        6 * cfg.active_param_count() * 256 * 4096, rel=1e-6)
+    dec = model_flops(cfg, SHAPES["decode_32k"])
+    # 2·N per generated token x batch
+    assert dec == pytest.approx(2 * cfg.active_param_count() * 128, rel=1e-6)
+
+
+def test_moe_uses_active_params():
+    cfg = registry.get_config("qwen3-moe-235b-a22b")
+    assert cfg.active_param_count() < 0.15 * cfg.param_count()
+    f = model_flops(cfg, SHAPES["train_4k"])
+    assert f == pytest.approx(
+        6 * cfg.active_param_count() * 256 * 4096, rel=1e-6)
+
+
+def test_long_context_skips():
+    skips, runs = [], []
+    for arch in registry.ASSIGNED_ARCHS:
+        cfg = registry.get_config(arch)
+        (runs if shape_applicable(arch, cfg.family, SHAPES["long_500k"])
+         else skips).append(arch)
+    assert sorted(runs) == ["gemma3-1b", "mamba2-2.7b", "zamba2-7b"]
+    assert len(skips) == 7
+    # every other shape applies to every arch
+    for shape in ("train_4k", "prefill_32k", "decode_32k"):
+        for arch in registry.ASSIGNED_ARCHS:
+            cfg = registry.get_config(arch)
+            assert shape_applicable(arch, cfg.family, SHAPES[shape])

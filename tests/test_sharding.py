@@ -1,0 +1,106 @@
+"""Sharding rules + HLO collective parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.dist.sharding import (
+    assert_no_cross_worker_collectives, batch_shardings, collective_bytes,
+    param_spec, param_shardings, parse_replica_groups,
+)
+from repro.models.model import Model
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_param_spec_rules(mesh):
+    # base (unstacked) params — embedding/head keep their contraction dim
+    # OFF the data axis (see §Perf iter 1 in EXPERIMENTS.md)
+    assert param_spec("embed/table", (512, 256), mesh) == P(None, "model")
+    assert param_spec("head/w", (256, 512), mesh) == P(None, "model")
+    # stacked under scanned blocks: two leading None dims
+    spec = param_spec("blocks/attn/wq", (4, 1, 256, 512), mesh)
+    assert spec == P(None, None, "data", "model")
+    # optimizer-state mirror gets the same spec
+    spec2 = param_spec("mu/blocks/attn/wq", (4, 1, 256, 512), mesh)
+    assert spec == spec2
+    # norm scales replicate
+    assert param_spec("blocks/ln1/scale", (4, 1, 256), mesh) == P()
+
+
+def test_divisibility_fallback():
+    m = jax.make_mesh((1, 1), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # dims that don't divide by the axis group size stay replicated
+    big = jax.make_mesh((1, 1), ("data", "model"),
+                        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    spec = param_spec("attn/wk", (256, 3), big)   # 3 kv-dim indivisible by 1?
+    # axis size 1 divides everything; use a fake larger mesh via resolve
+    from repro.dist.sharding import _resolve
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 16}
+    assert _resolve(FakeMesh, ("embed", "heads"), (256, 40)) == P("data", None)
+    assert _resolve(FakeMesh, ("embed", "heads"), (256, 64)) == P("data", "model")
+
+
+def test_all_arch_params_get_shardings(mesh):
+    """Every leaf of every smoke arch resolves to a sharding without error,
+    and at least the big matmuls are sharded (non-trivial spec)."""
+    for arch in registry.ASSIGNED_ARCHS:
+        cfg = registry.get_smoke_config(arch)
+        model = Model(cfg)
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        sh = param_shardings(mesh, shapes)
+        assert jax.tree_util.tree_structure(sh) == \
+            jax.tree_util.tree_structure(shapes)
+
+
+def test_batch_shardings(mesh):
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
+    sh = batch_shardings(mesh, batch)
+    assert sh["tokens"].spec == P("data", None) or \
+        sh["tokens"].spec == P()  # 1-device mesh: data axis size 1 divides
+
+
+HLO_SAMPLE = """
+  %ar = f32[16,512]{1,0} all-reduce(f32[16,512]{1,0} %x), replica_groups={{0,1},{2,3}}
+  %ag.1 = bf16[4,128]{1,0} all-gather(bf16[2,128]{1,0} %y), replica_groups=[2,2]<=[4]
+  %add = f32[16]{0} add(f32[16]{0} %a, f32[16]{0} %b)
+"""
+
+
+def test_collective_bytes_parses_kinds():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-reduce"] == 16 * 512 * 4
+    assert out["all-gather"] == 4 * 128 * 2
+    assert "add" not in out and len(out) == 2
+
+
+def test_parse_replica_groups_list_and_iota():
+    groups = parse_replica_groups(HLO_SAMPLE)
+    assert [0, 1] in groups and [2, 3] in groups
+
+
+def test_cross_worker_assertion():
+    ok_hlo = "%ar = f32[4]{0} all-reduce(%x), replica_groups={{0,1},{2,3}}"
+    assert_no_cross_worker_collectives(ok_hlo, n_workers=2,
+                                       devices_per_worker=2)
+    bad_hlo = "%ar = f32[4]{0} all-reduce(%x), replica_groups={{0,2}}"
+    with pytest.raises(AssertionError):
+        assert_no_cross_worker_collectives(bad_hlo, n_workers=2,
+                                           devices_per_worker=2)
+
+
+def test_iota_transpose_groups():
+    hlo = "%ar = f32[8]{0} all-reduce(%x), replica_groups=[2,2]<=[2,2]T(1,0)"
+    groups = parse_replica_groups(hlo)
+    # arange(4).reshape(2,2).T = [[0,2],[1,3]]
+    assert [0, 2] in groups and [1, 3] in groups

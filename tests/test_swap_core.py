@@ -1,0 +1,173 @@
+"""SWAP algorithm invariants: averaging, schedules, ensemble equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry
+from repro.configs.base import (OptimizerConfig, PhaseConfig, ScheduleConfig,
+                                SWAPConfig)
+from repro.core.adapters import LMAdapter
+from repro.core.averaging import StreamingAverage, average_list, average_stacked
+from repro.core.schedules import schedule_fn
+from repro.core.swap import SWAP, _stack_batches, _stack_bundles
+from repro.data.pipeline import Loader, make_markov_lm
+
+
+# ---------------------------------------------------------------------------
+# averaging
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed, shapes={"a": (5, 3), "b": (7,)}):
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    return {k: jax.random.normal(kk, s)
+            for (k, s), kk in zip(shapes.items(), ks)}
+
+
+def test_average_stacked_equals_list():
+    trees = [_tree(i) for i in range(4)]
+    a1 = average_list(trees)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+    a2 = average_stacked(stacked)
+    for k in a1:
+        np.testing.assert_allclose(np.asarray(a1[k]), np.asarray(a2[k]),
+                                   atol=1e-6)
+
+
+def test_streaming_average_equals_mean():
+    trees = [_tree(i) for i in range(5)]
+    s = StreamingAverage()
+    for t in trees:
+        s.add(t)
+    want = average_list(trees)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(s.value()[k]),
+                                   np.asarray(want[k]), atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(w=st.integers(2, 8), seed=st.integers(0, 100))
+def test_property_average_within_hull(w, seed):
+    """The averaged model is inside the convex hull of worker models:
+    coordinate-wise min <= avg <= max (basic sanity of phase 3)."""
+    trees = [_tree(seed + i) for i in range(w)]
+    avg = average_list(trees)
+    for k in avg:
+        stack = np.stack([np.asarray(t[k]) for t in trees])
+        assert (np.asarray(avg[k]) <= stack.max(0) + 1e-6).all()
+        assert (np.asarray(avg[k]) >= stack.min(0) - 1e-6).all()
+
+
+def test_average_of_identical_models_is_identity():
+    t = _tree(0)
+    avg = average_list([t, t, t])
+    for k in t:
+        np.testing.assert_allclose(np.asarray(avg[k]), np.asarray(t[k]),
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def test_warmup_linear_shape():
+    fn = schedule_fn(ScheduleConfig(kind="warmup_linear", peak_lr=1.0,
+                                    warmup_steps=10, total_steps=100,
+                                    end_lr=0.0))
+    assert float(fn(0)) == 0.0
+    np.testing.assert_allclose(float(fn(10)), 1.0, atol=1e-6)
+    assert float(fn(5)) == pytest.approx(0.5)
+    assert float(fn(100)) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_cyclic_resets_each_cycle():
+    fn = schedule_fn(ScheduleConfig(kind="cyclic", peak_lr=0.5, min_lr=0.1,
+                                    cycle_steps=10))
+    assert float(fn(0)) == pytest.approx(0.5)
+    assert float(fn(10)) == pytest.approx(0.5)   # cycle restart
+    assert float(fn(9)) < float(fn(0))
+
+
+@settings(max_examples=20, deadline=None)
+@given(warm=st.integers(1, 20), total=st.integers(30, 200),
+       peak=st.floats(1e-4, 2.0))
+def test_property_schedule_bounded(warm, total, peak):
+    """LR never exceeds peak and never goes negative, for any step."""
+    fn = schedule_fn(ScheduleConfig(kind="warmup_cosine", peak_lr=peak,
+                                    warmup_steps=warm, total_steps=total))
+    steps = np.arange(0, total + 50)
+    lrs = np.array([float(fn(s)) for s in steps])
+    assert (lrs <= peak + 1e-6).all()
+    assert (lrs >= -1e-9).all()
+
+
+# ---------------------------------------------------------------------------
+# phase-2 ensemble semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = registry.get_smoke_config("internlm2-1.8b")
+    data = make_markov_lm(0, vocab=cfg.vocab_size, n_train=256, n_test=128,
+                          seq_len=16)
+    train = {"tokens": data["train_tokens"], "labels": data["train_labels"]}
+    adapter = LMAdapter(cfg, OptimizerConfig(kind="sgd"))
+    return adapter, train
+
+
+def test_ensemble_step_equals_independent_runs(lm_setup):
+    """The vmapped worker ensemble must be EXACTLY independent training:
+    running W workers via vmap == running each sequentially. This is the
+    code-level form of the paper's 'no synchronization in phase 2'."""
+    adapter, train = lm_setup
+    W = 3
+    sched = schedule_fn(ScheduleConfig(kind="const", peak_lr=0.05))
+    raw_step = adapter.make_train_step(sched)
+    loader = Loader(train, 16, seed=7)
+
+    bundle = adapter.init(jax.random.PRNGKey(1))
+    # vmapped path
+    stacked = _stack_bundles(bundle, W)
+    opt_stacked = jax.vmap(adapter.init_opt)(stacked)
+    ens = jax.jit(jax.vmap(raw_step, in_axes=(0, 0, 0, None)))
+    for step in range(3):
+        batches = _stack_batches([loader.batch(step, worker=w)
+                                  for w in range(W)])
+        stacked, opt_stacked, _ = ens(stacked, opt_stacked, batches, step)
+
+    # sequential path
+    step_fn = jax.jit(raw_step)
+    for w in range(W):
+        b = bundle
+        o = adapter.init_opt(b)
+        for step in range(3):
+            b, o, _ = step_fn(b, o, loader.batch(step, worker=w), step)
+        got = jax.tree_util.tree_map(lambda a: np.asarray(a[w]),
+                                     stacked["params"])
+        for (p1, l1), (p2, l2) in zip(
+                jax.tree_util.tree_flatten_with_path(got)[0],
+                jax.tree_util.tree_flatten_with_path(b["params"])[0]):
+            np.testing.assert_allclose(l1, np.asarray(l2), atol=1e-5,
+                                       rtol=1e-4)
+
+
+def test_workers_diverge_with_different_data(lm_setup):
+    """Phase-2 stochasticity: different data orders => different weights."""
+    adapter, train = lm_setup
+    cfg_swap = SWAPConfig(
+        n_workers=2,
+        phase1=PhaseConfig(batch_size=64, max_steps=2,
+                           schedule=ScheduleConfig(kind="const", peak_lr=0.1)),
+        phase2=PhaseConfig(batch_size=16, max_steps=3,
+                           schedule=ScheduleConfig(kind="const", peak_lr=0.05)))
+    test_loader = Loader(train, 64)
+    res = SWAP(adapter, cfg_swap, train, test_loader).run(
+        jax.random.PRNGKey(0))
+    stacked = res["stacked_params"]
+    diffs = jax.tree_util.tree_map(
+        lambda a: float(jnp.abs(a[0] - a[1]).max()), stacked)
+    assert max(jax.tree_util.tree_leaves(diffs)) > 1e-6
