@@ -23,6 +23,7 @@ from repro.configs.base import PhaseConfig, SWAPConfig
 from repro.core.averaging import average_stacked
 from repro.core.schedules import schedule_fn as make_schedule
 from repro.data.pipeline import Loader
+from repro.dist.sharding import ensemble_shardings
 
 
 def _stack_bundles(bundle, n: int):
@@ -74,11 +75,25 @@ class SWAP:
     """The full three-phase algorithm over an adapter + dataset."""
 
     def __init__(self, adapter, cfg: SWAPConfig, train_arrays: Dict,
-                 test_loader: Loader):
+                 test_loader: Loader, mesh=None):
+        """``mesh``: optional device mesh with a ``worker`` axis (see
+        ``launch.mesh.make_worker_mesh``). When given, the phase-2 stacked
+        bundle is placed with its leading W axis sharded over ``worker``
+        (``dist.sharding.ensemble_shardings``), so the one vmapped ensemble
+        program executes as W independent per-worker sub-programs — the
+        paper's no-synchronization property, checked in HLO by
+        ``assert_no_cross_worker_collectives``. Without a mesh the same
+        code runs as a plain single-device vmap."""
         self.adapter = adapter
         self.cfg = cfg
         self.train_arrays = train_arrays
         self.test_loader = test_loader
+        self.mesh = mesh
+
+    def _place_ensemble(self, tree):
+        if self.mesh is None or "worker" not in self.mesh.axis_names:
+            return tree
+        return jax.device_put(tree, ensemble_shardings(self.mesh, tree))
 
     def run(self, key, collect_curves: bool = False) -> Dict:
         cfg = self.cfg
@@ -106,11 +121,11 @@ class SWAP:
         ens_step = jax.jit(jax.vmap(raw_step, in_axes=(0, 0, 0, None)),
                            donate_argnums=(0, 1))
 
-        stacked = _stack_bundles(bundle, W)
-        opt_stacked = jax.vmap(adapter.init_opt)(stacked)
+        stacked = self._place_ensemble(_stack_bundles(bundle, W))
+        opt_stacked = self._place_ensemble(jax.vmap(adapter.init_opt)(stacked))
         for step in range(cfg.phase2.max_steps):
-            batches = _stack_batches(
-                [loader2.batch(step, worker=w) for w in range(W)])
+            batches = self._place_ensemble(_stack_batches(
+                [loader2.batch(step, worker=w) for w in range(W)]))
             stacked, opt_stacked, metrics = ens_step(
                 stacked, opt_stacked, batches, step)
             if collect_curves:

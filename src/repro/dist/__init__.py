@@ -1,0 +1,12 @@
+"""Distribution subsystem: meshes, sharding rules, HLO collective checks.
+
+Importing this package installs the small jax compatibility shims (see
+``repro.dist.compat``) needed to run the sharding API on the pinned
+JAX 0.4.37 — callers that create meshes with ``axis_types=`` get them
+accepted (and ignored) instead of a ``TypeError``.
+"""
+from repro.dist import compat as _compat
+
+_compat.install()
+
+from repro.dist import sharding  # noqa: E402,F401

@@ -1,0 +1,60 @@
+"""JAX-version compatibility shims for the sharding subsystem.
+
+The repo pins JAX 0.4.37, but the sharding call sites (and the seed test
+suite) were written against the newer explicit-sharding surface:
+
+  * ``jax.sharding.AxisType`` (enum with ``Auto`` / ``Explicit`` / ``Manual``)
+    — does not exist in 0.4.37;
+  * ``jax.make_mesh(shape, names, axis_types=...)`` — 0.4.37's ``make_mesh``
+    rejects the ``axis_types`` keyword;
+  * ``jax.set_mesh(mesh)`` — the ambient-mesh context manager.
+
+On 0.4.37 every mesh axis is implicitly Auto (GSPMD decides placements), so
+``axis_types=(AxisType.Auto, ...)`` carries no information and can be
+accepted and dropped. ``install()`` patches exactly that — it never changes
+behaviour on a JAX new enough to have the real API.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` (added after 0.4.37)."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _wrap_make_mesh(make_mesh):
+    # only installed when make_mesh's signature lacks axis_types, so the
+    # kwarg is always dropped: on 0.4.37 every axis is Auto anyway
+    @functools.wraps(make_mesh)
+    def wrapped(axis_shapes, axis_names, *args, axis_types=None, **kwargs):
+        del axis_types
+        return make_mesh(axis_shapes, axis_names, *args, **kwargs)
+
+    wrapped.__wrapped_for_axis_types__ = True
+    return wrapped
+
+
+def install() -> None:
+    """Idempotently install the shims onto the ``jax`` namespace."""
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+    if not getattr(jax.make_mesh, "__wrapped_for_axis_types__", False):
+        import inspect
+
+        # signature probe only — never instantiate a mesh at import time
+        params = inspect.signature(jax.make_mesh).parameters
+        if "axis_types" not in params:
+            jax.make_mesh = _wrap_make_mesh(jax.make_mesh)
+    if not hasattr(jax, "set_mesh"):
+        # our ambient-mesh context (resolved by logical_constraint)
+        from repro.dist import sharding
+
+        jax.set_mesh = sharding.set_mesh

@@ -1,0 +1,406 @@
+"""Sharding rules, the ambient mesh, and HLO collective accounting.
+
+This module is the single place that knows how the repo's pytrees map onto
+a device mesh. Three groups of exports:
+
+  * **Mesh context** — ``set_mesh`` / ``get_mesh`` hold the ambient mesh;
+    ``logical_constraint(x, axes)`` resolves *logical* axis names (``batch``,
+    ``heads``, ``experts``, ...) against it and applies a
+    ``with_sharding_constraint``. Outside a mesh it is the identity, so model
+    code can sprinkle constraints freely and still run on a bare CPU.
+
+  * **Parameter / batch / cache rules** — ``param_spec`` derives a
+    ``PartitionSpec`` from a parameter's tree path and shape (FSDP-style:
+    matmul weights over ``("data", "model")``, embedding/head contraction
+    dims kept OFF the data axis, stacked-block leading dims unsharded, norm
+    scales replicated, expert stacks over ``model``). Optimizer-state trees
+    mirror their parameters: a leading ``mu/`` / ``nu/`` path component is
+    stripped before the rules apply, so state shards exactly like its
+    parameter. Every rule goes through a per-dim divisibility check and
+    falls back to replication for dims the mesh axis does not divide.
+
+  * **HLO collective accounting** — ``parse_replica_groups`` /
+    ``collective_bytes`` read post-SPMD HLO text;
+    ``assert_no_cross_worker_collectives`` proves the SWAP phase-2 property
+    (Gupta et al., 2020: workers train with *no synchronization*) directly
+    on the compiled program: every collective's replica group must stay
+    inside one worker's device block.
+
+Axis vocabulary (see docs/sharding.md): mesh axes are ``worker`` (SWAP
+phase-2 independence), ``data`` (batch / FSDP), ``model`` (tensor
+parallelism) and optionally a leading ``pod``. Logical activation/parameter
+axis names resolve to mesh axes through ``LOGICAL_AXIS_RULES``.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# ambient mesh
+# ---------------------------------------------------------------------------
+
+_STATE = threading.local()
+
+
+def get_mesh():
+    """The ambient mesh set by ``set_mesh``, or None."""
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh for
+    ``logical_constraint`` resolution (thread-local, re-entrant)."""
+    prev = get_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh = prev
+
+
+# ---------------------------------------------------------------------------
+# logical axis resolution
+# ---------------------------------------------------------------------------
+
+# logical name -> mesh axis. Names already equal to a mesh axis resolve to
+# themselves; unknown names (or axes missing from the mesh) replicate.
+LOGICAL_AXIS_RULES: Dict[str, str] = {
+    "batch": "data",
+    "embed": "data",      # FSDP: shard the feature dim over the data axis
+    "heads": "model",
+    "kv": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "stack": None,
+    "seq": None,
+}
+
+
+def _resolve(mesh, axes: Sequence[Optional[str]],
+             shape: Sequence[int]) -> P:
+    """Resolve logical axis names to a PartitionSpec against ``mesh``.
+
+    Per dim: map the logical name through LOGICAL_AXIS_RULES (identity for
+    names that already are mesh axes), then replicate the dim if the mesh
+    axis is absent, already used by an earlier dim, or does not divide the
+    dim size. Only needs ``mesh.axis_names`` and ``mesh.shape``, so tests
+    can pass a lightweight fake mesh.
+    """
+    names = tuple(mesh.axis_names)
+    sizes = dict(mesh.shape)
+    axes = tuple(axes) + (None,) * (len(shape) - len(axes))
+    used: set = set()
+    out: List[Optional[str]] = []
+    for ax, dim in zip(axes, shape):
+        mesh_ax = LOGICAL_AXIS_RULES.get(ax, ax) if ax is not None else None
+        if (mesh_ax is None or mesh_ax not in names or mesh_ax in used
+                or dim % sizes[mesh_ax] != 0):
+            out.append(None)
+        else:
+            out.append(mesh_ax)
+            used.add(mesh_ax)
+    if all(a is None for a in out):
+        return P()  # canonical replication, rank-independent
+    return P(*out)
+
+
+def logical_constraint(x, axes: Sequence[Optional[str]]):
+    """``with_sharding_constraint(x, axes-resolved-on-the-ambient-mesh)``.
+
+    A no-op (returns ``x`` itself) when no mesh is set, so model code works
+    unchanged on a single CPU device and under plain ``vmap``.
+    """
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    spec = _resolve(mesh, axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# optimizer-state containers whose trees mirror the parameter tree
+_OPT_PREFIXES = ("mu", "nu", "m", "v")
+
+# tree-path prefixes that carry stacked leading dims (scan over units):
+# blocks/ leaves are (n_units, unit_len, ...); tail/ and encoder/blocks/
+# leaves are (n, ...)
+_STACK_PREFIXES: Tuple[Tuple[str, int], ...] = (
+    ("blocks/", 2),
+    ("encoder/blocks/", 1),
+    ("tail/", 1),
+)
+
+
+def _strip_opt_prefix(parts: List[str]) -> List[str]:
+    while parts and parts[0] in _OPT_PREFIXES:
+        parts = parts[1:]
+    return parts
+
+
+def _stack_dims(path: str) -> int:
+    for prefix, n in _STACK_PREFIXES:
+        if path.startswith(prefix):
+            return n
+    return 0
+
+
+def param_spec(name: str, shape: Sequence[int], mesh) -> P:
+    """PartitionSpec for a parameter (or optimizer-state mirror) leaf.
+
+    ``name`` is the ``/``-joined tree path. Rules, applied to the *core*
+    shape (after the stacked leading dims of ``blocks/`` etc.):
+
+      * scalars, vectors, norm ``scale``/``bias``  -> replicated
+      * ``embed/table`` and ``head/w``             -> (None, ..., "model")
+        — the contraction dim stays OFF the data axis so the head matmul
+        resolves by gathering weights, not partial-summing activations
+      * MoE expert stacks (``moe/wi|wg|wo``)       -> ("experts", None, None)
+        — expert-parallel over the model axis, dense per expert shard
+      * any other weight with >= 2 core dims       -> (..., "data", "model")
+
+    Every rule passes through the divisibility fallback of ``_resolve``.
+    """
+    parts = _strip_opt_prefix([p for p in name.split("/") if p])
+    path = "/".join(parts)
+    leaf = parts[-1] if parts else ""
+    n_stack = _stack_dims(path)
+    core = tuple(shape[n_stack:])
+
+    if len(core) <= 1 or leaf in ("scale", "bias"):
+        return P()
+    if path == "embed/table" or path.endswith("head/w"):
+        # contraction dim OFF the data axis: only the output/feature dim
+        # shards (over model), so the head matmul gathers weights instead of
+        # partial-summing activations across data
+        axes: Tuple[Optional[str], ...] = \
+            (None,) * (len(core) - 1) + ("model",)
+    elif ("moe/" in path or path.startswith("moe")) and len(core) == 3:
+        # (n_experts, d_in, d_out) expert stacks: expert-parallel over the
+        # model axis, dense per expert shard (matches the activation
+        # constraint ("batch", "experts", None, None) in models/moe.py)
+        axes = ("experts",) + (None,) * (len(core) - 1)
+    else:
+        axes = (None,) * (len(core) - 2) + ("embed", "heads")
+    spec = _resolve(mesh, (None,) * n_stack + axes, shape)
+    if all(a is None for a in spec):
+        return P()
+    return spec
+
+
+def path_str(path) -> str:
+    """Flatten a tree_map_with_path key path to the '/'-joined rule key."""
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_shardings(mesh, tree):
+    """NamedSharding tree mirroring ``tree`` (params OR optimizer state)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path_str(path), leaf.shape, mesh)),
+        tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh, tree):
+    """Batch leaves shard their leading dim over ``data`` (with divisibility
+    fallback); everything else replicates."""
+    def leaf_sharding(leaf):
+        if getattr(leaf, "ndim", 0) == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, _resolve(mesh, ("batch",), leaf.shape))
+    return jax.tree_util.tree_map(leaf_sharding, tree)
+
+
+def cache_batch_dim(path: str) -> int:
+    """Batch-dim position of a KV/SSM-cache leaf: leaves under the stacked
+    ``units`` subtree carry the unit axis first, so batch is dim 1."""
+    return 1 if path.split("/", 1)[0] == "units" else 0
+
+
+def data_axes(tree):
+    """Pytree of ints: which dim of each leaf is the batch/data dim.
+
+    0 for plain batch leaves, 1 for stacked-unit cache leaves — the same
+    rule the serving engine uses to scatter per-request cache rows.
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_batch_dim(path_str(path)), tree)
+
+
+def cache_shardings(mesh, tree, batch: Optional[int] = None):
+    """Decode-cache shardings: the batch dim (position given by
+    ``cache_batch_dim``) goes on ``data``; all other dims replicate."""
+    def leaf_sharding(path, leaf):
+        if getattr(leaf, "ndim", 0) == 0:
+            return NamedSharding(mesh, P())
+        bd = cache_batch_dim(path_str(path))
+        if bd >= leaf.ndim:
+            return NamedSharding(mesh, P())
+        axes: List[Optional[str]] = [None] * leaf.ndim
+        axes[bd] = "batch"
+        return NamedSharding(mesh, _resolve(mesh, axes, leaf.shape))
+    return jax.tree_util.tree_map_with_path(leaf_sharding, tree)
+
+
+def ensemble_shardings(mesh, tree):
+    """SWAP phase-2 stacked-bundle shardings: the leading worker axis of
+    every stacked leaf goes on the mesh ``worker`` axis; per-worker content
+    replicates inside the worker block (the block's own data/model sharding
+    is applied by in-step ``logical_constraint``s)."""
+    def leaf_sharding(leaf):
+        if getattr(leaf, "ndim", 0) == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, _resolve(mesh, ("worker",), leaf.shape))
+    return jax.tree_util.tree_map(leaf_sharding, tree)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9a-z]*)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_GROUPS_LIST_RE = re.compile(
+    r"replica_groups=\{(\{[0-9, ]*\}(?:,\s*\{[0-9, ]*\})*)\}")
+_PAIRS_RE = re.compile(
+    r"source_target_pairs=\{(\{[0-9, ]*\}(?:,\s*\{[0-9, ]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[([0-9,]+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+
+def _tensor_bytes(dtype: str, dims: str) -> int:
+    n = _DTYPE_BYTES.get(dtype)
+    if n is None:
+        return 0
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def collective_bytes(hlo: str) -> Dict[str, int]:
+    """Sum output bytes of every collective in HLO text, keyed by kind.
+
+    Matches ``all-reduce`` / ``all-gather`` / ``reduce-scatter`` /
+    ``all-to-all`` / ``collective-permute`` (async ``-start`` forms count
+    once; ``-done`` forms are skipped to avoid double counting). Bytes come
+    from the instruction's *output* shape(s), which is what crosses the
+    interconnect per device.
+    """
+    out: Dict[str, int] = {}
+    for line in hlo.splitlines():
+        for kind in _COLLECTIVE_KINDS:
+            m = re.search(rf"[\s=]{re.escape(kind)}(-start)?\(", line)
+            if m is None:
+                continue
+            lhs = line[:m.start() + 1]
+            if "=" not in lhs:
+                continue
+            shapes = _SHAPE_RE.findall(lhs.split("=", 1)[1])
+            if m.group(1) and len(shapes) >= 2:
+                # async form: the output tuple is (operand(s), result(s),
+                # [context scalars]) — only the result half crosses the wire
+                shapes = shapes[len(shapes) // 2:]
+            nbytes = sum(_tensor_bytes(dt, dims) for dt, dims in shapes)
+            if nbytes:
+                out[kind] = out.get(kind, 0) + nbytes
+            break
+    return out
+
+
+def parse_replica_groups(hlo: str) -> List[List[int]]:
+    """All replica groups in HLO text, in both syntaxes:
+
+      * explicit lists:  ``replica_groups={{0,1},{2,3}}``
+      * iota form:       ``replica_groups=[G,S]<=[dims]`` with an optional
+        transpose ``T(perm)`` — expand ``arange(prod(dims)).reshape(dims)
+        .transpose(perm).reshape(G, S)``, one group per row.
+    """
+    groups: List[List[int]] = []
+    for m in _GROUPS_LIST_RE.finditer(hlo):
+        for body in re.findall(r"\{([0-9, ]*)\}", m.group(1)):
+            ids = [int(t) for t in body.replace(" ", "").split(",") if t]
+            if ids:
+                groups.append(ids)
+    for m in _GROUPS_IOTA_RE.finditer(hlo):
+        gshape = [int(t) for t in m.group(1).split(",") if t]
+        dims = [int(t) for t in m.group(2).split(",") if t]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(3):
+            perm = [int(t) for t in m.group(3).split(",") if t]
+            ids = ids.transpose(perm)
+        ids = ids.reshape(gshape[0], -1)
+        groups.extend(ids.astype(int).tolist())
+    return groups
+
+
+def parse_source_target_pairs(hlo: str) -> List[List[int]]:
+    """All ``collective-permute`` ``source_target_pairs={{s,t},...}`` in HLO
+    text, one ``[source, target]`` pair per entry. Permutes carry pairs, not
+    ``replica_groups`` — a cross-worker check must read both."""
+    pairs: List[List[int]] = []
+    for m in _PAIRS_RE.finditer(hlo):
+        for body in re.findall(r"\{([0-9, ]*)\}", m.group(1)):
+            ids = [int(t) for t in body.replace(" ", "").split(",") if t]
+            if ids:
+                pairs.append(ids)
+    return pairs
+
+
+def assert_no_cross_worker_collectives(hlo: str, n_workers: int,
+                                       devices_per_worker: int) -> int:
+    """Assert every collective replica group stays inside one worker block.
+
+    Worker ``w`` owns the contiguous device ids
+    ``[w*devices_per_worker, (w+1)*devices_per_worker)`` (the worker axis is
+    outermost in the mesh device order — see ``launch.mesh.make_worker_mesh``).
+    This is the paper's phase-2 property, checked on the compiled program:
+    a group straddling two blocks means the partitioner synchronized
+    workers. ``collective-permute`` communicates through
+    ``source_target_pairs`` rather than ``replica_groups``; each pair is
+    checked the same way, and an empty ``replica_groups={}`` (XLA's "one
+    group of ALL replicas") counts as a group spanning every device.
+    Raises AssertionError explicitly (not a bare ``assert``) so the
+    guarantee survives ``python -O``. Returns the number of groups + pairs
+    checked.
+    """
+    groups = parse_replica_groups(hlo) + parse_source_target_pairs(hlo)
+    n_all_replica = len(re.findall(r"replica_groups=\{\}", hlo))
+    if n_all_replica and n_workers > 1:
+        all_devices = list(range(n_workers * devices_per_worker))
+        groups += [all_devices] * n_all_replica
+    for group in groups:
+        owners = {device // devices_per_worker for device in group}
+        if len(owners) > 1:
+            raise AssertionError(
+                f"collective replica group {group} spans workers "
+                f"{sorted(owners)} (n_workers={n_workers}, "
+                f"devices_per_worker={devices_per_worker}): SWAP phase-2 "
+                f"workers must not synchronize")
+    return len(groups)

@@ -81,9 +81,10 @@ def _blockwise_reference(q, k, v, *, causal, window, scale, q_offset, chunk):
     return out.astype(q.dtype)
 
 
-@functools.partial(jax.custom_vjp,
-                   nondiff_argnames=("causal", "window", "scale", "q_offset",
-                                     "chunk"))
+# JAX 0.4.37: custom_vjp has no nondiff_argnames; positional argnums (all
+# static/hashable: bools, ints, float-or-None) express the same thing. The
+# bwd signature already receives them first, per the argnums convention.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
 def _pallas_attention(q, k, v, causal, window, scale, q_offset, chunk):
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   scale=scale, q_offset=q_offset)

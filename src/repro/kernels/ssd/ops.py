@@ -112,7 +112,9 @@ def _chunked_reference(x, dt, A, Bm, Cm, D, chunk, init_state):
     return y, final
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnames=("chunk",))
+# JAX 0.4.37: custom_vjp has no nondiff_argnames; chunk (arg 7, a static
+# int) becomes a positional nondiff argnum — bwd already takes it first.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7,))
 def _pallas_ssd(x, dt, A, Bm, Cm, D, init_state, chunk):
     S = x.shape[1]
     c = min(chunk, S)

@@ -35,7 +35,7 @@ from repro.core.schedules import schedule_fn
 from repro.configs.base import ScheduleConfig
 from repro.dist.sharding import (
     assert_no_cross_worker_collectives, batch_shardings, cache_shardings,
-    collective_bytes, data_axes, param_shardings,
+    collective_bytes, data_axes, param_shardings, set_mesh,
 )
 from repro.launch.mesh import make_production_mesh, make_worker_mesh
 from repro.models.model import Model
@@ -129,6 +129,8 @@ def _jit_for_shape(model: Model, cfg: ModelConfig, shape: ShapeConfig, mesh):
 
 def _terms_from_compiled(compiled) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # JAX 0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     coll = collective_bytes(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),
@@ -162,7 +164,7 @@ def roofline_extrapolated(arch: str, shape: ShapeConfig, mesh,
         # set_mesh here, not at the caller: logical_constraint() resolves
         # against the ambient mesh and silently no-ops without it — which
         # would probe an unconstrained (partial-sum-heavy) program.
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             fn, args = _jit_for_shape(vmodel, vcfg, shape, mesh)
             return _terms_from_compiled(fn.lower(*args).compile())
 
@@ -230,7 +232,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
     else:
         fn, args = _jit_for_shape(model, cfg, shape, mesh)
         ctx_mesh = mesh
-    with jax.set_mesh(ctx_mesh):
+    with set_mesh(ctx_mesh):
         lowered = fn.lower(*args)
         t1 = time.perf_counter()
         compiled = lowered.compile()
@@ -322,8 +324,7 @@ def _ensemble_jit(model: Model, cfg: ModelConfig, shape: ShapeConfig, mesh,
     model_par = mesh.shape["model"]
     block_devices = mesh.devices.reshape(-1)[:block_size].reshape(
         block_size // model_par, model_par)
-    block_mesh = jax.sharding.Mesh(block_devices, ("data", "model"),
-                                   axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    block_mesh = jax.sharding.Mesh(block_devices, ("data", "model"))
 
     params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     opt_shape = jax.eval_shape(opt_init, params_shape)

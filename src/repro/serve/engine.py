@@ -21,6 +21,7 @@ from typing import Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.dist.sharding import cache_batch_dim, path_str
 from repro.models.model import Model
 
 
@@ -33,16 +34,6 @@ class Request:
     # filled by the engine
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
-
-
-def _batch_dim(path_str: str) -> int:
-    """Batch-dim position of a cache leaf (after the stacked units axis)."""
-    return 1 if path_str.startswith("units/") else 0
-
-
-def _path_str(path) -> str:
-    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                    for p in path)
 
 
 class ServingEngine:
@@ -93,7 +84,9 @@ class ServingEngine:
         flat_new = jax.tree_util.tree_flatten(prefill_cache)[0]
         leaves = []
         for (path, dst), src in zip(flat_engine[0], flat_new):
-            bd = _batch_dim(_path_str(path))
+            # the cache's batch-dim layout is owned by repro.dist (the same
+            # rule cache_shardings uses to put the batch dim on `data`)
+            bd = cache_batch_dim(path_str(path))
             idx = [slice(None)] * dst.ndim
             idx[bd] = slot
             src_row = jnp.take(src.astype(dst.dtype), 0, axis=bd)

@@ -1,0 +1,1 @@
+"""Test-support utilities (dependency stubs for the hermetic CI image)."""

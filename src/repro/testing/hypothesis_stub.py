@@ -1,0 +1,116 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API the test
+suite uses (``given`` / ``settings`` / ``strategies.integers|floats|
+sampled_from``).
+
+The CI image does not ship hypothesis and the repo cannot install packages,
+so ``tests/conftest.py`` installs this module into ``sys.modules`` **only
+when the real library is missing** — with hypothesis installed, the stub is
+never imported.
+
+Semantics: each ``@given`` test runs ``max_examples`` times (default 20,
+overridable by ``@settings``) with values drawn from a deterministic PRNG
+seeded by the test's qualified name, so failures reproduce run-to-run. The
+first two examples pin every strategy to its min/max corner, which is where
+the seed suite's properties (divisibility, epoch boundaries, W=2 vs W=8)
+actually bite. No shrinking — the failing example's kwargs are in the
+assertion traceback.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import types
+from typing import Any, Callable, List, Sequence
+
+
+class _Strategy:
+    """A strategy is (corner values, random draw)."""
+
+    def __init__(self, corners: Sequence[Any],
+                 draw: Callable[[random.Random], Any]):
+        self.corners = list(corners)
+        self.draw = draw
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy([min_value, max_value],
+                     lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_ignored) -> _Strategy:
+    return _Strategy(
+        [min_value, max_value],
+        lambda rng: min_value + (max_value - min_value) * rng.random())
+
+
+def sampled_from(elements: Sequence[Any]) -> _Strategy:
+    elements = list(elements)
+    return _Strategy([elements[0], elements[-1]],
+                     lambda rng: elements[rng.randrange(len(elements))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy([False, True], lambda rng: bool(rng.getrandbits(1)))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng: random.Random) -> List[Any]:
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+
+    corners = [[elements.corners[0]] * max(min_size, 1),
+               [elements.corners[-1]] * max_size]
+    return _Strategy(corners, draw)
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    """Records max_examples on the decorated (possibly @given-wrapped) fn."""
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies_by_name):
+    """Keyword-style ``@given`` (the only form the suite uses)."""
+    def deco(fn):
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in strategies_by_name]
+
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", None) \
+                or getattr(fn, "_stub_max_examples", None) or 20
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            names = sorted(strategies_by_name)
+            for i in range(n):
+                if i < 2:  # corner examples first: all-min, then all-max
+                    drawn = {k: strategies_by_name[k].corners[
+                        min(i, len(strategies_by_name[k].corners) - 1)]
+                        for k in names}
+                else:
+                    drawn = {k: strategies_by_name[k].draw(rng)
+                             for k in names}
+                fn(*args, **kwargs, **drawn)
+
+        # hide the drawn params from pytest's fixture resolution
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+# ``from hypothesis import strategies as st`` resolves this attribute
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.sampled_from = sampled_from
+strategies.booleans = booleans
+strategies.lists = lists
+
+HealthCheck = types.SimpleNamespace(too_slow="too_slow",
+                                    data_too_large="data_too_large")

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, OptimizerConfig
+from repro.dist.sharding import logical_constraint
 from repro.models.model import Model
 from repro.optim.api import init_optimizer
 
@@ -52,6 +53,12 @@ def make_lm_train_step(model: Model, opt_cfg: OptimizerConfig,
     grad_dtype = jnp.dtype(opt_cfg.grad_dtype)
 
     def train_step(params, opt_state, batch, step):
+        # pin every batch leaf to the data axis at the step boundary so the
+        # loss (and its backward) starts from a batch-sharded layout even if
+        # the host fed differently-placed arrays; no-op without a mesh
+        batch = {k: logical_constraint(v, ("batch",))
+                 for k, v in batch.items()}
+
         def loss_fn(p):
             return lm_loss_and_metrics(model, p, batch)
 

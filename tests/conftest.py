@@ -1,13 +1,48 @@
 import os
+import sys
 
-# Tests run on the host's real device view (1 CPU device). Only the dry-run
-# entrypoint forces 512 fake devices — importing repro.launch.dryrun during
-# pytest collection must NOT flip the whole test process to 512 devices
-# (dryrun uses setdefault, so pinning XLA_FLAGS here wins).
+# Multi-device CPU harness: mesh/sharding tests exercise 8 fake host devices
+# (worker x data x model splits) instead of a degenerate 1-device mesh. Must
+# be set BEFORE jax is first imported. Importing repro.launch.dryrun during
+# collection must NOT flip the process to 512 devices (dryrun uses
+# setdefault, so the explicit assignment here wins).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
-os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
-    " --xla_force_host_platform_device_count=1"
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+        " --xla_force_host_platform_device_count=8"
 
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+import repro.dist  # noqa: E402,F401  (installs the JAX 0.4.37 compat shims)
+
+# The CI image has no hypothesis; install the deterministic stub only when
+# the real library is absent (see repro/testing/hypothesis_stub.py).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from repro.testing import hypothesis_stub
+
+    sys.modules["hypothesis"] = hypothesis_stub
+    sys.modules["hypothesis.strategies"] = hypothesis_stub.strategies
+
+import pytest  # noqa: E402
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "tpu: needs a real TPU (Pallas compiled mode, ICI-bandwidth asserts)"
+        " — skipped on CPU hosts")
+
+
+def pytest_collection_modifyitems(config, items):
+    if jax.default_backend() == "tpu":
+        return
+    skip_tpu = pytest.mark.skip(
+        reason="requires a real TPU; this host runs the XLA CPU backend")
+    for item in items:
+        if "tpu" in item.keywords:
+            item.add_marker(skip_tpu)
