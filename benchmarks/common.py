@@ -17,7 +17,7 @@ from typing import Dict, List
 import jax
 
 from repro.configs import registry
-from repro.configs.base import (ModelConfig, OptimizerConfig, PhaseConfig,
+from repro.configs.base import (OptimizerConfig, PhaseConfig,
                                 SWAConfig, ScheduleConfig, SWAPConfig)
 from repro.core.adapters import CNNAdapter, LMAdapter
 from repro.core.swa import SWA

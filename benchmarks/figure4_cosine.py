@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import cnn_task
-from repro.configs.base import OptimizerConfig, ScheduleConfig
+from repro.configs.base import ScheduleConfig
 from repro.core.averaging import average_list
 from repro.core.schedules import schedule_fn
 from repro.data.pipeline import Loader

@@ -5,7 +5,6 @@ sliding-window, MLA-latent, and SSM caches all exercised).
   PYTHONPATH=src python examples/serve_batched.py [--arch mamba2-2.7b]
 """
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,12 @@ Default is the ~100M model (12L x d768, vocab 2048); pass --smoke for a
 30-second variant. Any assigned architecture works via --arch.
 
   PYTHONPATH=src python examples/train_lm_swap.py [--smoke] \
-      [--arch internlm2-1.8b] [--workers 4]
+      [--arch internlm2-1.8b] [--workers 4] \
+      [--checkpoint-dir ckpts/ --checkpoint-every 20] [--resume]
+
+With --checkpoint-dir set, the run snapshots its TrainState every
+--checkpoint-every steps (epoch-aligned); kill it at any point and relaunch
+with --resume to continue bit-exactly from the newest snapshot.
 """
 import argparse
 
@@ -35,7 +40,12 @@ def main():
     ap.add_argument("--steps1", type=int, default=200)
     ap.add_argument("--steps2", type=int, default=60)
     ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
+    if args.resume and not args.checkpoint_dir:
+        raise SystemExit("--resume requires --checkpoint-dir")
 
     if args.arch:
         cfg = registry.get_smoke_config(args.arch)
@@ -67,15 +77,18 @@ def main():
                            schedule=ScheduleConfig(kind="warmup_linear",
                                                    peak_lr=0.1,
                                                    warmup_steps=0,
-                                                   total_steps=steps2)))
+                                                   total_steps=steps2)),
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every)
     res = SWAP(adapter, swap_cfg, train, test_loader).run(
-        jax.random.PRNGKey(0))
+        jax.random.PRNGKey(0), resume=args.resume)
     print(f"phase1: {res['phase1_steps']} steps, "
           f"test acc {res['phase1_test_acc']:.4f}")
     print(f"workers: {['%.4f' % a for a in res['worker_test_accs']]}")
     print(f"SWAP averaged: {res['after_avg_test_acc']:.4f} "
           f"(before: {res['before_avg_test_acc']:.4f})")
     print(f"times: p1 {res['phase1_time']:.1f}s p2 {res['phase2_time']:.1f}s "
+          f"(+{res['phase2_eval_time']:.1f}s eval) "
           f"p3 {res['phase3_time']:.1f}s")
 
 

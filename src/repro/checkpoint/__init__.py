@@ -1,1 +1,5 @@
 from repro.checkpoint.io import load_pytree, save_pytree
+from repro.checkpoint.state import (
+    Checkpointer, find_resume_point, list_checkpoints, load_train_state,
+    save_train_state, state_step,
+)

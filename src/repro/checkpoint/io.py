@@ -27,11 +27,22 @@ def _flatten(tree) -> dict:
     return flat
 
 
+def atomic_write(path: str, data: bytes) -> None:
+    """Write-then-rename so a kill mid-write can never leave a truncated
+    file at ``path`` — the resume contract is 'kill at any point'. The temp
+    name starts with '.' so directory scans (checkpoint.state._FILE_RE)
+    never match a partial file."""
+    directory = os.path.dirname(os.path.abspath(path))
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, "." + os.path.basename(path) + ".tmp")
+    with open(tmp, "wb") as f:
+        f.write(data)
+    os.replace(tmp, path)
+
+
 def save_pytree(path: str, tree: Any) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     payload = _flatten(tree)
-    with open(path, "wb") as f:
-        f.write(msgpack.packb(payload, use_bin_type=True))
+    atomic_write(path, msgpack.packb(payload, use_bin_type=True))
 
 
 def load_pytree(path: str, template: Any):
@@ -48,6 +59,16 @@ def load_pytree(path: str, template: Any):
         if key not in payload:
             raise KeyError(f"checkpoint missing leaf {key!r}")
         rec = payload[key]
-        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        want = tuple(getattr(leaf, "shape", np.shape(leaf)))
+        if tuple(rec["shape"]) != want:
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {tuple(rec['shape'])} "
+                f"but the template expects {want} — was the config (e.g. "
+                f"n_workers, model size) changed between save and resume?")
+        # np.frombuffer returns a READ-ONLY view into the msgpack payload;
+        # copy before handing it to jnp so a later donation of the restored
+        # array can never alias (or try to mutate) the checkpoint buffer.
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(
+            rec["shape"]).copy()
         new_leaves.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,155 @@
+"""Train-state checkpointing: periodic snapshots + exact mid-phase resume.
+
+A layer over ``save_pytree``/``load_pytree`` that understands the phase
+engine's ``TrainState`` (``repro.train.loop``):
+
+  * ``save_train_state`` / ``load_train_state`` — byte-exact round trip of a
+    whole TrainState (bundle, optimizer state, step, EMA, phase tag, rng),
+    including the phase-2 stacked form with a leading W worker axis. A JSON
+    sidecar (``<file>.json``) carries the metadata needed to pick a resume
+    point without deserializing arrays.
+  * ``Checkpointer`` — periodic snapshots at epoch-aligned steps
+    (``maybe_save`` fires when ``step % every == 0``), with pruning of old
+    snapshots per tag. Tags: ``phase1`` (mid-phase-1), ``phase1_final``
+    (phase-1 result + its summary metrics, the anchor for phase-2 resume),
+    ``phase2`` (mid-phase-2 stacked state).
+  * ``find_resume_point`` — newest usable snapshot in a directory, in
+    resume-priority order phase2 > phase1_final > phase1.
+
+Restores are exact: the resumed run executes the same compiled epoch chunks
+on bit-identical state, so its parameters and metric logs match an
+uninterrupted run bitwise (asserted by ``tests/test_resume.py``). On a
+worker mesh, the caller re-places the loaded stacked state with
+``dist.sharding.ensemble_shardings`` (see ``SWAP._place_ensemble``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.checkpoint.io import atomic_write, load_pytree, save_pytree
+from repro.train.loop import TrainState
+
+_FILE_RE = re.compile(r"^(phase1_final|phase1|phase2)-step(\d+)\.msgpack$")
+# resume priority: a phase2 snapshot supersedes phase1_final supersedes phase1
+_TAG_ORDER = {"phase1": 0, "phase1_final": 1, "phase2": 2}
+
+
+def _state_tree(state: TrainState) -> Dict[str, Any]:
+    return dict(state._asdict())
+
+
+def state_step(state: TrainState) -> int:
+    """Global step of a state; phase-2 stacked states store one step per
+    worker (always equal — workers advance in lockstep epochs)."""
+    return int(np.asarray(state.step).reshape(-1)[0])
+
+
+def save_train_state(path: str, state: TrainState,
+                     meta: Optional[Dict[str, Any]] = None) -> None:
+    # sidecar BEFORE the snapshot, both via atomic write-then-rename: the
+    # .msgpack is what directory scans key off, so a kill anywhere in here
+    # leaves either a complete (snapshot, meta) pair or nothing visible
+    atomic_write(path + ".json",
+                 json.dumps(meta or {}, indent=1).encode())
+    save_pytree(path, _state_tree(state))
+
+
+def load_train_state(path: str, template: TrainState) -> TrainState:
+    """Restore a TrainState into the structure/shapes of ``template`` (built
+    by the resuming process from the same config — e.g. the freshly stacked
+    phase-2 state for a mid-phase-2 restore)."""
+    tree = load_pytree(path, _state_tree(template))
+    return TrainState(**tree)
+
+
+def read_meta(path: str) -> Dict[str, Any]:
+    try:
+        with open(path + ".json") as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def list_checkpoints(directory: str) -> List[Dict[str, Any]]:
+    """All snapshots in ``directory`` as dicts {path, tag, step, meta}."""
+    if not directory or not os.path.isdir(directory):
+        return []
+    out = []
+    for name in sorted(os.listdir(directory)):
+        m = _FILE_RE.match(name)
+        if not m:
+            continue
+        path = os.path.join(directory, name)
+        out.append({"path": path, "tag": m.group(1),
+                    "step": int(m.group(2)), "meta": read_meta(path)})
+    return out
+
+
+def find_resume_point(directory: str) -> Optional[Dict[str, Any]]:
+    """The snapshot a resumed run should restart from, or None.
+
+    Highest (tag priority, step): the newest phase2 snapshot if any, else
+    phase1_final, else the newest mid-phase-1 snapshot.
+    """
+    ckpts = list_checkpoints(directory)
+    if not ckpts:
+        return None
+    return max(ckpts, key=lambda c: (_TAG_ORDER[c["tag"]], c["step"]))
+
+
+class Checkpointer:
+    """Periodic epoch-aligned snapshots of a TrainState.
+
+    ``every`` is a step count; because the phase engine only surfaces state
+    at epoch-chunk boundaries, a snapshot is written at the first boundary
+    that is >= ``every`` steps past the previous snapshot (so any
+    ``every`` produces a usable cadence; a multiple of steps_per_epoch
+    makes it exact). ``keep`` bounds snapshots retained per rolling tag;
+    ``phase1_final`` is never pruned (phase-2 resume needs it).
+    """
+
+    def __init__(self, directory: str, every: int = 0, keep: int = 3):
+        self.directory = directory
+        self.every = every
+        self.keep = keep
+        self._last_saved: Dict[str, int] = {}
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+
+    def _path(self, tag: str, step: int) -> str:
+        return os.path.join(self.directory, f"{tag}-step{step:08d}.msgpack")
+
+    def save(self, tag: str, state: TrainState,
+             meta: Optional[Dict[str, Any]] = None) -> str:
+        step = state_step(state)
+        path = self._path(tag, step)
+        save_train_state(path, state, dict(meta or {}, tag=tag, step=step))
+        self._last_saved[tag] = step
+        self._prune(tag)
+        return path
+
+    def maybe_save(self, tag: str, state: TrainState,
+                   meta: Optional[Dict[str, Any]] = None) -> Optional[str]:
+        if self.every <= 0:
+            return None
+        step = state_step(state)
+        if step <= 0 or step - self._last_saved.get(tag, 0) < self.every:
+            return None
+        return self.save(tag, state, meta)
+
+    def _prune(self, tag: str) -> None:
+        if tag == "phase1_final" or self.keep <= 0:
+            return
+        mine = [c for c in list_checkpoints(self.directory)
+                if c["tag"] == tag]
+        for stale in mine[:-self.keep]:
+            for p in (stale["path"], stale["path"] + ".json"):
+                try:
+                    os.remove(p)
+                except OSError:
+                    pass

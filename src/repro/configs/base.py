@@ -326,6 +326,11 @@ class SWAPConfig:
     bn_recompute_batches: int = 8
     bn_recompute_batch_size: int = 256
     seed: int = 0
+    # periodic TrainState snapshots (repro.checkpoint.state): every N steps,
+    # landing on epoch-aligned chunk boundaries; 0 / "" disables. Resume via
+    # SWAP.run(resume=True) restarts bit-exactly mid-phase-1 or mid-phase-2.
+    checkpoint_dir: str = ""
+    checkpoint_every: int = 0
 
 
 @dataclass(frozen=True)

@@ -1,29 +1,51 @@
 """SWAP (Algorithm 1 of the paper) — the three-phase controller.
 
 Phase 1: synchronous large-batch SGD until train accuracy >= τ (EMA over
-         batch accuracy — the paper uses epoch train accuracy; EMA is the
-         streaming equivalent) or max_steps.
+         batch accuracy, checked at epoch boundaries — the paper uses epoch
+         train accuracy; the streaming EMA surfaced once per compiled epoch
+         chunk is its engine-native equivalent) or max_steps.
 Phase 2: W independent small-batch workers from the common phase-1 model,
          each with its own data ordering — executed as a *worker-axis
-         ensemble*: parameters stacked on a leading W axis and the step
-         vmapped. On a TPU mesh the W axis is sharded on the `worker` mesh
-         axis so the lowered program has no cross-worker collectives; on CPU
-         the same code runs as a plain vmap.
+         ensemble*: parameters stacked on a leading W axis and the whole
+         scanned epoch vmapped. On a TPU mesh the W axis is sharded on the
+         `worker` mesh axis so the lowered program has no cross-worker
+         collectives; on CPU the same code runs as a plain vmap.
 Phase 3: average the W models; recompute BN statistics (adapter hook).
+
+Execution runs on the compiled phase engine (``repro.train.loop``): a
+``TrainState`` (bundle, opt_state, step, accuracy EMA, phase tag, rng)
+flows through each phase as epoch-sized ``lax.scan`` chunks inside one jit,
+with every worker batch gathered in-trace from device-resident data — the
+host never builds or stacks batches in the hot loop. Curve collection,
+eval, and checkpointing happen between chunks and are timed separately
+from training. With ``SWAPConfig.checkpoint_dir``/``checkpoint_every`` set,
+periodic snapshots allow ``run(resume=True)`` to restart bit-exactly
+mid-phase-1 or mid-phase-2 (see ``repro.checkpoint.state``).
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.checkpoint.state import (
+    Checkpointer, find_resume_point, list_checkpoints, load_train_state,
+    state_step,
+)
 from repro.configs.base import PhaseConfig, SWAPConfig
 from repro.core.averaging import average_stacked
 from repro.core.schedules import schedule_fn as make_schedule
 from repro.data.pipeline import Loader
 from repro.dist.sharding import ensemble_shardings
+from repro.train.loop import (
+    EpochRunner, TrainState, init_train_state, run_phase, stack_train_state,
+)
+
+_PHASE1_SUMMARY_KEYS = ("phase1_steps", "phase1_train_acc", "phase1_time",
+                        "phase1_test_acc")
 
 
 def _stack_bundles(bundle, n: int):
@@ -31,13 +53,18 @@ def _stack_bundles(bundle, n: int):
         lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), bundle)
 
 
-def _stack_batches(batches: List[Dict]):
-    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *batches)
+def _engine_unroll(adapter) -> bool:
+    """Unroll epoch chunks for conv models on CPU hosts: XLA:CPU runs
+    convolutions inside while-loop bodies on a slow non-vectorized path
+    (see EpochRunner); everywhere else the while-form scan is right."""
+    return getattr(adapter, "kind", "") == "cnn" \
+        and jax.default_backend() == "cpu"
 
 
 class SGDRun:
-    """Plain single-model training loop (phase 1, and the small/large-batch
-    baselines of Tables 1-3)."""
+    """Plain single-model training (phase 1, and the small/large-batch
+    baselines of Tables 1-3) on the compiled phase engine: epoch-sized scan
+    chunks, EMA early-exit at epoch boundaries."""
 
     def __init__(self, adapter, phase: PhaseConfig, train_arrays: Dict,
                  seed: int = 0):
@@ -45,30 +72,30 @@ class SGDRun:
         self.phase = phase
         self.loader = Loader(train_arrays, phase.batch_size, seed=seed)
         sched = make_schedule(phase.schedule)
-        self.step_fn = jax.jit(adapter.make_train_step(sched),
-                               donate_argnums=(0, 1))
+        self.runner = EpochRunner(adapter.make_train_step(sched), self.loader,
+                                  phase.accuracy_ema,
+                                  unroll=_engine_unroll(adapter))
 
-    def run(self, bundle, opt_state=None, start_step: int = 0,
-            log: Optional[list] = None, worker: int = 0):
-        """Returns (bundle, opt_state, steps_taken, acc_ema)."""
-        phase = self.phase
+    def init_state(self, bundle, opt_state=None, start_step: int = 0,
+                   phase_tag: str = "phase1") -> TrainState:
         opt_state = opt_state if opt_state is not None \
             else self.adapter.init_opt(bundle)
-        ema, beta = 0.0, phase.accuracy_ema
-        step = start_step
-        for step in range(start_step, start_step + phase.max_steps):
-            batch = self.loader.batch(step, worker=worker)
-            bundle, opt_state, metrics = self.step_fn(
-                bundle, opt_state, batch, step)
-            acc = float(metrics["accuracy"])
-            ema = beta * ema + (1 - beta) * acc
-            if log is not None:
-                log.append({"step": step, "accuracy": acc, "ema": ema,
-                            "loss": float(metrics["loss"]),
-                            "lr": float(metrics["lr"])})
-            if ema >= phase.stop_accuracy:
-                break
-        return bundle, opt_state, step + 1 - start_step, ema
+        return init_train_state(bundle, opt_state, step=start_step,
+                                phase=phase_tag)
+
+    def run(self, bundle, opt_state=None, start_step: int = 0,
+            log: Optional[list] = None, worker: int = 0,
+            checkpointer: Optional[Checkpointer] = None,
+            tag: str = "phase1"):
+        """Returns (bundle, opt_state, steps_taken, acc_ema)."""
+        state = self.init_state(bundle, opt_state, start_step)
+        res = run_phase(self.runner, state, worker,
+                        max_steps=self.phase.max_steps,
+                        stop_accuracy=self.phase.stop_accuracy, log=log,
+                        checkpointer=checkpointer, tag=tag)
+        st = res.state
+        return (st.bundle, st.opt_state, res.steps,
+                float(np.asarray(st.acc_ema)))
 
 
 class SWAP:
@@ -78,10 +105,10 @@ class SWAP:
                  test_loader: Loader, mesh=None):
         """``mesh``: optional device mesh with a ``worker`` axis (see
         ``launch.mesh.make_worker_mesh``). When given, the phase-2 stacked
-        bundle is placed with its leading W axis sharded over ``worker``
-        (``dist.sharding.ensemble_shardings``), so the one vmapped ensemble
-        program executes as W independent per-worker sub-programs — the
-        paper's no-synchronization property, checked in HLO by
+        TrainState is placed with its leading W axis sharded over ``worker``
+        (``dist.sharding.ensemble_shardings``), so the one vmapped+scanned
+        ensemble program executes as W independent per-worker sub-programs —
+        the paper's no-synchronization property, checked in HLO by
         ``assert_no_cross_worker_collectives``. Without a mesh the same
         code runs as a plain single-device vmap."""
         self.adapter = adapter
@@ -95,69 +122,138 @@ class SWAP:
             return tree
         return jax.device_put(tree, ensemble_shardings(self.mesh, tree))
 
-    def run(self, key, collect_curves: bool = False) -> Dict:
+    # ------------------------------------------------------------------
+    # phase 2 state assembly / restore
+    # ------------------------------------------------------------------
+
+    def _phase2_init_state(self, bundle) -> TrainState:
+        W = self.cfg.n_workers
+        stacked = _stack_bundles(bundle, W)
+        opt_stacked = jax.vmap(self.adapter.init_opt)(stacked)
+        return stack_train_state(stacked, opt_stacked, W,
+                                 seed=self.cfg.seed + 2)
+
+    def run(self, key, collect_curves: bool = False,
+            resume: bool = False) -> Dict:
         cfg = self.cfg
         adapter = self.adapter
         results: Dict = {"phase1_log": [], "phase2_curves": []}
+
+        ckpt = Checkpointer(cfg.checkpoint_dir, cfg.checkpoint_every) \
+            if cfg.checkpoint_dir else None
+        resume_pt = find_resume_point(cfg.checkpoint_dir) \
+            if (resume and cfg.checkpoint_dir) else None
 
         # ---------------- phase 1: large batch, synchronous --------------
         t0 = time.perf_counter()
         bundle = adapter.init(key)
         p1 = SGDRun(adapter, cfg.phase1, self.train_arrays, seed=cfg.seed)
-        bundle, _, steps1, ema1 = p1.run(bundle, log=results["phase1_log"])
-        t1 = time.perf_counter()
-        results["phase1_steps"] = steps1
-        results["phase1_train_acc"] = ema1
-        results["phase1_time"] = t1 - t0
-        results["phase1_test_acc"] = adapter.eval_accuracy(
-            bundle, self.test_loader)
+        if resume_pt is not None and resume_pt["tag"] in ("phase1_final",
+                                                          "phase2"):
+            # phase 1 finished in a previous process: restore its final
+            # state + summary metrics from the phase1_final snapshot
+            finals = [c for c in list_checkpoints(cfg.checkpoint_dir)
+                      if c["tag"] == "phase1_final"]
+            if not finals:
+                raise ValueError(
+                    f"cannot resume {resume_pt['tag']} from "
+                    f"{cfg.checkpoint_dir!r}: no phase1_final snapshot")
+            state1 = load_train_state(finals[-1]["path"],
+                                      p1.init_state(bundle))
+            bundle = state1.bundle
+            for k in _PHASE1_SUMMARY_KEYS:
+                if k in finals[-1]["meta"]:
+                    results[k] = finals[-1]["meta"][k]
+        else:
+            state1 = p1.init_state(bundle)
+            prior_t1 = 0.0
+            if resume_pt is not None:      # tag == "phase1": mid-phase-1
+                state1 = load_train_state(resume_pt["path"], state1)
+                # pre-interrupt wall time, so reported phase1_time stays
+                # consistent with the cumulative phase1_steps
+                prior_t1 = resume_pt["meta"].get("phase1_time", 0.0)
+            res1 = run_phase(
+                p1.runner, state1, 0,
+                max_steps=cfg.phase1.max_steps - int(np.asarray(state1.step)),
+                stop_accuracy=cfg.phase1.stop_accuracy,
+                log=results["phase1_log"], checkpointer=ckpt, tag="phase1",
+                checkpoint_meta=lambda tt: {
+                    "phase1_time": prior_t1 + time.perf_counter() - t0})
+            state1 = res1.state
+            bundle = state1.bundle
+            results["phase1_steps"] = int(np.asarray(state1.step))
+            results["phase1_train_acc"] = float(np.asarray(state1.acc_ema))
+            results["phase1_time"] = prior_t1 + time.perf_counter() - t0
+            results["phase1_test_acc"] = adapter.eval_accuracy(
+                bundle, self.test_loader)
+            if ckpt is not None:
+                ckpt.save("phase1_final", state1,
+                          meta={k: results[k] for k in _PHASE1_SUMMARY_KEYS})
 
         # ---------------- phase 2: independent small-batch workers -------
         W = cfg.n_workers
         loader2 = Loader(self.train_arrays, cfg.phase2.batch_size,
                          seed=cfg.seed + 1)
-        sched2 = make_schedule(cfg.phase2.schedule)
-        raw_step = adapter.make_train_step(sched2)
-        ens_step = jax.jit(jax.vmap(raw_step, in_axes=(0, 0, 0, None)),
-                           donate_argnums=(0, 1))
+        runner2 = EpochRunner(
+            adapter.make_train_step(make_schedule(cfg.phase2.schedule)),
+            loader2, cfg.phase2.accuracy_ema, ensemble=True,
+            unroll=_engine_unroll(adapter))
 
-        stacked = self._place_ensemble(_stack_bundles(bundle, W))
-        opt_stacked = self._place_ensemble(jax.vmap(adapter.init_opt)(stacked))
-        for step in range(cfg.phase2.max_steps):
-            batches = self._place_ensemble(_stack_batches(
-                [loader2.batch(step, worker=w) for w in range(W)]))
-            stacked, opt_stacked, metrics = ens_step(
-                stacked, opt_stacked, batches, step)
-            if collect_curves:
+        state2 = self._phase2_init_state(bundle)
+        prior_t2 = 0.0
+        if resume_pt is not None and resume_pt["tag"] == "phase2":
+            state2 = load_train_state(resume_pt["path"], state2)
+            prior_t2 = resume_pt["meta"].get("phase2_train_time", 0.0)
+        state2 = self._place_ensemble(state2)
+        workers = self._place_ensemble(jnp.arange(W, dtype=jnp.int32))
+
+        # hoisted out of the loop: ONE BN-recompute loader serves every
+        # curve point and the final phase-3 finalize
+        bn_loader = Loader(self.train_arrays, cfg.bn_recompute_batch_size,
+                           seed=cfg.seed)
+        curve_hook = None
+        if collect_curves:
+            def curve_hook(state: TrainState, done: int):
                 avg_now = adapter.finalize(
-                    average_stacked(stacked["params"]),
-                    Loader(self.train_arrays, cfg.bn_recompute_batch_size,
-                           seed=cfg.seed), cfg.bn_recompute_batches)
-                worker_accs = [
+                    average_stacked(state.bundle["params"]), bn_loader,
+                    cfg.bn_recompute_batches)
+                accs: List[float] = [
                     adapter.eval_accuracy(
-                        jax.tree_util.tree_map(lambda a: a[w], stacked),
+                        jax.tree_util.tree_map(lambda a: a[w], state.bundle),
                         self.test_loader, max_batches=2)
                     for w in range(W)]
                 results["phase2_curves"].append({
-                    "step": step, "worker_test_accs": worker_accs,
+                    "step": state_step(state) - 1,
+                    "worker_test_accs": accs,
                     "avg_test_acc": adapter.eval_accuracy(
                         avg_now, self.test_loader, max_batches=2)})
-        t2 = time.perf_counter()
-        results["phase2_time"] = t2 - t1
+
+        res2 = run_phase(runner2, state2, workers,
+                         max_steps=cfg.phase2.max_steps - state_step(state2),
+                         chunk_steps=1 if collect_curves else None,
+                         checkpointer=ckpt, tag="phase2",
+                         checkpoint_meta=lambda tt: {
+                             "phase2_train_time": prior_t2 + tt},
+                         on_chunk=curve_hook)
+        state2 = res2.state
+        results["phase2_steps"] = state_step(state2)
+        # train time only (cumulative across resumes) — curve eval /
+        # checkpoint time is reported separately so the paper's speed claim
+        # is measured on the hot path
+        results["phase2_time"] = prior_t2 + res2.train_time
+        results["phase2_eval_time"] = res2.hook_time
 
         # per-worker test accuracy BEFORE averaging (paper's row 3)
         worker_accs = []
         for w in range(W):
-            b_w = jax.tree_util.tree_map(lambda a: a[w], stacked)
+            b_w = jax.tree_util.tree_map(lambda a: a[w], state2.bundle)
             worker_accs.append(adapter.eval_accuracy(b_w, self.test_loader))
         results["worker_test_accs"] = worker_accs
         results["before_avg_test_acc"] = sum(worker_accs) / W
 
         # ---------------- phase 3: average + BN recompute ----------------
         t3 = time.perf_counter()
-        avg_params = average_stacked(stacked["params"])
-        bn_loader = Loader(self.train_arrays, cfg.bn_recompute_batch_size,
-                           seed=cfg.seed)
+        avg_params = average_stacked(state2.bundle["params"])
         final = adapter.finalize(avg_params, bn_loader,
                                  cfg.bn_recompute_batches)
         t4 = time.perf_counter()
@@ -166,6 +262,6 @@ class SWAP:
             final, self.test_loader)
         results["total_time"] = t4 - t0
         results["final_bundle"] = final
-        results["stacked_params"] = stacked["params"]
+        results["stacked_params"] = state2.bundle["params"]
         results["phase1_bundle"] = bundle
         return results

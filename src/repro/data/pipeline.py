@@ -102,30 +102,51 @@ class Loader:
                  seed: int = 0):
         self.arrays = {k: jnp.asarray(v) for k, v in arrays.items()}
         sizes = {v.shape[0] for v in arrays.values()}
-        assert len(sizes) == 1, "all arrays must share the leading dim"
+        if len(sizes) != 1:
+            raise ValueError(
+                f"all arrays must share the leading dim, got sizes {sizes}")
         self.n = sizes.pop()
+        if batch_size > self.n:
+            raise ValueError(
+                f"batch_size {batch_size} exceeds dataset size {self.n}")
         self.batch_size = batch_size
-        assert batch_size <= self.n, (batch_size, self.n)
         self.seed = seed
         self.steps_per_epoch = self.n // batch_size
 
-    def _perm(self, worker: int, epoch):
+    def _perm(self, worker, epoch):
         key = jax.random.fold_in(
             jax.random.fold_in(jax.random.PRNGKey(self.seed), worker), epoch)
         return jax.random.permutation(key, self.n)
 
-    def batch(self, step, worker: int = 0) -> Dict[str, jnp.ndarray]:
+    def batch_in_trace(self, step, worker=0) -> Dict[str, jnp.ndarray]:
+        """Device-resident batch gather, traceable under jit/vmap/scan.
+
+        ``step`` and ``worker`` may be traced int32 scalars: the epoch
+        permutation, the slice offset and the augmentation seed are all pure
+        jnp functions of (seed, worker, epoch, step), and the dataset arrays
+        live on device from construction — so the phase-2 engine can gather
+        each worker's batch *inside* the vmapped/scanned train step with no
+        host -> device transfer per step.
+        """
         epoch = step // self.steps_per_epoch
         offset = (step % self.steps_per_epoch) * self.batch_size
         perm = self._perm(worker, epoch)
         idx = jax.lax.dynamic_slice_in_dim(perm, offset, self.batch_size)
         out = {k: v[idx] for k, v in self.arrays.items()}
         # deterministic augmentation seed per (seed, worker, step); training
-        # losses that augment (CNN) consume it, others ignore it.
-        out["aug_seed"] = jnp.asarray(
-            (self.seed * 1000003 + worker * 9176 + int(step)) % (2**31 - 1),
-            jnp.int32)
+        # losses that augment (CNN) consume it, others ignore it. Computed in
+        # uint32 so it traces; ((A%M)+B%M)%M == (A+B)%M keeps it equal to the
+        # exact-integer host arithmetic it replaced.
+        m = jnp.uint32(2**31 - 1)
+        base = jnp.uint32((self.seed * 1000003) % (2**31 - 1))
+        rest = (jnp.asarray(worker, jnp.uint32) * jnp.uint32(9176)
+                + jnp.asarray(step, jnp.uint32)) % m
+        out["aug_seed"] = ((base + rest) % m).astype(jnp.int32)
         return out
+
+    def batch(self, step, worker: int = 0) -> Dict[str, jnp.ndarray]:
+        """Host-driven alias of ``batch_in_trace`` (same pure function)."""
+        return self.batch_in_trace(step, worker)
 
     def epoch_of(self, step) -> int:
         return step // self.steps_per_epoch

@@ -36,7 +36,7 @@ from __future__ import annotations
 import contextlib
 import re
 import threading
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np

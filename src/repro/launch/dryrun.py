@@ -26,7 +26,6 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, registry, shape_applicable
@@ -35,11 +34,10 @@ from repro.core.schedules import schedule_fn
 from repro.configs.base import ScheduleConfig
 from repro.dist.sharding import (
     assert_no_cross_worker_collectives, batch_shardings, cache_shardings,
-    collective_bytes, data_axes, param_shardings, set_mesh,
+    collective_bytes, param_shardings, set_mesh,
 )
 from repro.launch.mesh import make_production_mesh, make_worker_mesh
 from repro.models.model import Model
-from repro.optim.api import init_optimizer
 from repro.train.steps import make_lm_train_step
 
 # TPU v5e hardware constants (per chip)

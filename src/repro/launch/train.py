@@ -7,7 +7,12 @@ dry-run). The same controller drives the TPU path: phase 1 on the
 
   PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
       [--full] [--workers 4] [--phase1-steps 150] [--phase2-steps 60] \
-      [--stop-acc 0.6] [--optimizer sgd|lars|adamw] [--save out.ckpt]
+      [--stop-acc 0.6] [--optimizer sgd|lars|adamw] [--save out.ckpt] \
+      [--checkpoint-dir ckpts/ --checkpoint-every 50] [--resume]
+
+Long jobs: pass --checkpoint-dir/--checkpoint-every for periodic TrainState
+snapshots (epoch-aligned), then relaunch with --resume to continue
+bit-exactly from the newest snapshot — mid-phase-1 or mid-phase-2.
 """
 from __future__ import annotations
 
@@ -45,7 +50,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--save", default="")
     ap.add_argument("--json-out", default="")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="directory for periodic TrainState snapshots")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="snapshot cadence in steps (epoch-aligned); 0 = off")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the newest snapshot in "
+                         "--checkpoint-dir (bit-exact, mid-phase)")
     args = ap.parse_args()
+    if args.resume and not args.checkpoint_dir:
+        raise SystemExit("--resume requires --checkpoint-dir")
 
     cfg = (registry.get_config(args.arch) if args.full
            else registry.get_smoke_config(args.arch))
@@ -80,14 +94,15 @@ def main():
             schedule=ScheduleConfig(kind="warmup_linear", peak_lr=lr_small,
                                     warmup_steps=0,
                                     total_steps=args.phase2_steps)),
-        seed=args.seed)
+        seed=args.seed, checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every)
 
     n_params = cfg.param_count()
     print(f"arch={cfg.name} family={cfg.family} params={n_params/1e6:.1f}M "
           f"workers={args.workers}")
     t0 = time.time()
     res = SWAP(adapter, swap_cfg, train, test_loader).run(
-        jax.random.PRNGKey(args.seed))
+        jax.random.PRNGKey(args.seed), resume=args.resume)
     out = {k: v for k, v in res.items()
            if isinstance(v, (int, float, list)) and k != "phase1_log"}
     out["wall_s"] = time.time() - t0

@@ -9,7 +9,6 @@ Caches are plain dicts of arrays so they stack cleanly across scanned layers.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

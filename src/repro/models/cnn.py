@@ -7,7 +7,6 @@ line 28 of the paper. ``state`` holds the running (mean, var) used at eval.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

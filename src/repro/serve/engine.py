@@ -16,7 +16,7 @@ generation, token-exact).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,3 +1,7 @@
+from repro.train.loop import (
+    EpochRunner, PhaseResult, TrainState, init_train_state,
+    python_loop_reference, run_phase, stack_train_state,
+)
 from repro.train.steps import (
     lm_loss_and_metrics, make_decode_fn, make_lm_eval_fn, make_lm_train_step,
     make_prefill_fn,

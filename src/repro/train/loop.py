@@ -1,0 +1,265 @@
+"""Compiled phase engine: scan-based epoch runner over device-resident data.
+
+The SWAP controller used to dispatch one jitted step per Python iteration
+and rebuild W worker batches on the host every step — the host loop, not
+the hardware, set the step rate. This module replaces that with an
+epoch-granular runner:
+
+  * ``TrainState`` — the single pytree that flows through every phase:
+    (bundle, opt_state, step, acc_ema, phase tag, rng). Phase 2 carries the
+    same structure with a leading W worker axis on every leaf.
+  * ``EpochRunner`` — compiles ``lax.scan(train_step)`` over an epoch-sized
+    chunk inside ONE jit (vmapped over the worker axis for phase 2). Each
+    scanned step gathers its batch in-trace via ``Loader.batch_in_trace``,
+    so no per-step host work or host->device transfer remains.
+  * ``run_phase`` — the thin host driver: one compiled call per epoch,
+    early-exit on the accuracy EMA at *epoch boundaries* (the streaming
+    equivalent of the paper's per-epoch train-accuracy check), metric-log
+    extraction, periodic checkpointing, and an ``on_chunk`` hook (curve
+    collection / eval) whose wall time is accounted separately from train
+    time.
+  * ``python_loop_reference`` — the replaced per-step host loop, kept as
+    the equivalence oracle for tests and the baseline for
+    ``benchmarks/bench_train_loop.py``.
+
+Chunk lengths are static (steps_per_epoch, plus one shorter final chunk),
+so a phase compiles at most two programs per runner.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import Loader
+
+# phase tags carried inside TrainState (checkpointable, trace-friendly)
+PHASE_TAGS = {"sgd": 0, "phase1": 1, "phase2": 2}
+
+
+class TrainState(NamedTuple):
+    """Everything a phase needs to continue training from an exact point.
+
+    A registered pytree (NamedTuple), so it vmaps over a leading worker
+    axis, flows through ``lax.scan`` as the carry, and round-trips through
+    ``repro.checkpoint`` byte-exactly.
+    """
+
+    bundle: Any        # {"params": ..., "state": ...}
+    opt_state: Any
+    step: Any          # int32 scalar (per-worker vector in phase 2)
+    acc_ema: Any       # float32 scalar — streaming train-accuracy EMA
+    phase: Any         # int32 PHASE_TAGS value
+    rng: Any           # PRNGKey (reserved for stochastic steps)
+
+
+def init_train_state(bundle, opt_state, *, step: int = 0,
+                     acc_ema: float = 0.0, phase: str = "phase1",
+                     seed: int = 0) -> TrainState:
+    return TrainState(
+        bundle=bundle, opt_state=opt_state,
+        step=jnp.asarray(step, jnp.int32),
+        acc_ema=jnp.asarray(acc_ema, jnp.float32),
+        phase=jnp.asarray(PHASE_TAGS.get(phase, 0), jnp.int32),
+        rng=jax.random.PRNGKey(seed))
+
+
+def stack_train_state(stacked_bundle, stacked_opt_state, n_workers: int,
+                      seed: int = 0) -> TrainState:
+    """Assemble the phase-2 start state from an already-stacked bundle
+    (every worker begins from the common phase-1 model) and freshly
+    initialized per-worker optimizer state, both with a leading W axis."""
+    return TrainState(
+        bundle=stacked_bundle, opt_state=stacked_opt_state,
+        step=jnp.zeros((n_workers,), jnp.int32),
+        acc_ema=jnp.zeros((n_workers,), jnp.float32),
+        phase=jnp.full((n_workers,), PHASE_TAGS["phase2"], jnp.int32),
+        rng=jax.random.split(jax.random.PRNGKey(seed), n_workers))
+
+
+class EpochRunner:
+    """jit(lax.scan(train_step)) over epoch-sized chunks, with the batch
+    gathered in-trace.
+
+    ``ensemble=True`` vmaps the whole scanned epoch over the leading worker
+    axis of the state (SWAP phase 2): one compiled program advances all W
+    workers a full epoch, and — with the state placed by
+    ``dist.sharding.ensemble_shardings`` on a worker mesh — lowers to W
+    independent per-worker sub-programs with no cross-worker collectives.
+
+    Compiled programs are cached per chunk length; the input state is
+    donated, so long runs do not accumulate buffers.
+
+    ``unroll=True`` emits the chunk as straight-line code instead of an XLA
+    ``while`` loop (capped at ``_UNROLL_CAP`` steps to bound compile time).
+    XLA:CPU executes convolutions inside while-loop bodies on a slow
+    non-vectorized path (~8x at smoke scale, independent of thread count),
+    so conv models on CPU hosts should unroll; LM/transformer chunks are
+    fastest in while form, and on TPU the while form is always right
+    (compile-bounded, Pallas-compatible). The choice only affects scheduling
+    — per-step math is identical either way.
+    """
+
+    _UNROLL_CAP = 32
+
+    def __init__(self, step_fn: Callable, loader: Loader, ema_beta: float,
+                 ensemble: bool = False, unroll: bool = False):
+        self.step_fn = step_fn
+        self.loader = loader
+        self.ema_beta = ema_beta
+        self.ensemble = ensemble
+        self.unroll = unroll
+        self._compiled: Dict[int, Callable] = {}
+
+    def _chunk_fn(self, n_steps: int) -> Callable:
+        fn = self._compiled.get(n_steps)
+        if fn is not None:
+            return fn
+        step_fn, loader, beta = self.step_fn, self.loader, self.ema_beta
+
+        def run_chunk(state: TrainState, worker):
+            def body(st, _):
+                batch = loader.batch_in_trace(st.step, worker)
+                bundle, opt, metrics = step_fn(
+                    st.bundle, st.opt_state, batch, st.step)
+                ema = (beta * st.acc_ema
+                       + (1.0 - beta) * metrics["accuracy"]
+                       .astype(jnp.float32))
+                st = TrainState(bundle, opt, st.step + 1, ema,
+                                st.phase, st.rng)
+                return st, dict(metrics, ema=ema)
+
+            return jax.lax.scan(body, state, xs=None, length=n_steps,
+                                unroll=(self.unroll
+                                        and n_steps <= self._UNROLL_CAP))
+
+        if self.ensemble:
+            run_chunk = jax.vmap(run_chunk)
+        fn = jax.jit(run_chunk, donate_argnums=(0,))
+        self._compiled[n_steps] = fn
+        return fn
+
+    def run_chunk(self, state: TrainState, worker, n_steps: int):
+        """Advance ``n_steps`` inside one compiled call. Returns
+        (new_state, metrics) with every metric stacked over the step axis
+        (``(n_steps,)`` leaves; ``(W, n_steps)`` for ensembles)."""
+        return self._chunk_fn(n_steps)(state, worker)
+
+
+class PhaseResult(NamedTuple):
+    state: TrainState
+    steps: int          # steps executed by THIS driver invocation
+    train_time: float   # wall time inside compiled train chunks only
+    hook_time: float    # wall time in on_chunk / checkpoint / logging
+
+
+def _ema_value(state: TrainState) -> float:
+    ema = np.asarray(state.acc_ema)
+    return float(ema if ema.ndim == 0 else ema.min())
+
+
+def _append_log(log: List[dict], metrics: Dict, first_step: int) -> None:
+    host = {k: np.asarray(v) for k, v in metrics.items()
+            if k in ("accuracy", "ema", "loss", "lr")}
+    n = host["accuracy"].shape[-1]
+    for i in range(n):
+        log.append({"step": first_step + i,
+                    "accuracy": float(host["accuracy"][..., i]),
+                    "ema": float(host["ema"][..., i]),
+                    "loss": float(host["loss"][..., i]),
+                    "lr": float(host["lr"][..., i])})
+
+
+def run_phase(runner: EpochRunner, state: TrainState, worker, *,
+              max_steps: int, stop_accuracy: Optional[float] = None,
+              chunk_steps: Optional[int] = None, log: Optional[list] = None,
+              checkpointer=None, tag: str = "phase1",
+              checkpoint_meta: Optional[Callable] = None,
+              on_chunk: Optional[Callable] = None) -> PhaseResult:
+    """Drive a phase to completion: epoch-sized compiled chunks with
+    early-exit on the accuracy EMA at epoch boundaries.
+
+    ``max_steps`` counts from the CURRENT ``state.step`` (so a resumed state
+    runs only the remainder). ``on_chunk(state, steps_done)`` and
+    checkpointing run between chunks; their time is returned separately in
+    ``hook_time`` so eval never pollutes the train-rate measurement.
+    ``checkpoint_meta(train_time_so_far) -> dict`` attaches caller metadata
+    (e.g. cumulative phase wall/train time, so a later resume can report
+    totals instead of remainder-only figures) to each snapshot.
+    """
+    if log is not None and runner.ensemble:
+        raise ValueError(
+            "per-step logs are single-model only: ensemble metrics carry a "
+            "leading worker axis — consume them via on_chunk instead")
+    chunk = chunk_steps or runner.loader.steps_per_epoch
+    done, train_time, hook_time = 0, 0.0, 0.0
+    # entry check, not just post-chunk: a restored state that already meets
+    # the threshold (killed between its last snapshot and the phase-final
+    # save) must not train an extra epoch — resume stays bit-exact
+    if stop_accuracy is not None and _ema_value(state) >= stop_accuracy:
+        return PhaseResult(state, 0, 0.0, 0.0)
+    while done < max_steps:
+        n = min(chunk, max_steps - done)
+        t0 = time.perf_counter()
+        state, metrics = runner.run_chunk(state, worker, n)
+        jax.block_until_ready(state.bundle)
+        train_time += time.perf_counter() - t0
+        done += n
+
+        t1 = time.perf_counter()
+        if log is not None:
+            first = int(np.asarray(state.step).reshape(-1)[0]) - n
+            _append_log(log, metrics, first)
+        if on_chunk is not None:
+            on_chunk(state, done)
+        if checkpointer is not None:
+            checkpointer.maybe_save(
+                tag, state,
+                checkpoint_meta(train_time) if checkpoint_meta else None)
+        hook_time += time.perf_counter() - t1
+
+        if stop_accuracy is not None and _ema_value(state) >= stop_accuracy:
+            break
+    return PhaseResult(state, done, train_time, hook_time)
+
+
+def stack_host_batches(loader: Loader, step: int, n_workers: int):
+    """The replaced phase-2 host path: build every worker's batch on the
+    host and stack along a leading W axis. Baseline/oracle only — the
+    engine gathers batches in-trace instead (``Loader.batch_in_trace``)."""
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs),
+        *[loader.batch(step, worker=w) for w in range(n_workers)])
+
+
+def python_loop_reference(step_fn: Callable, loader: Loader,
+                          state: TrainState, worker: int = 0, *,
+                          n_steps: int, ema_beta: float):
+    """The per-step host-driven loop the scan engine replaced: one jitted
+    step dispatch per Python iteration, batch built on the host each step.
+
+    Kept as the equivalence oracle (tests assert the scan engine reproduces
+    it exactly) and as the baseline side of
+    ``benchmarks/bench_train_loop.py``. Returns (state, per-step log dicts).
+    """
+    fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    bundle, opt = state.bundle, state.opt_state
+    start = int(np.asarray(state.step))
+    ema = jnp.asarray(state.acc_ema)
+    logs = []
+    for s in range(start, start + n_steps):
+        batch = loader.batch(s, worker=worker)
+        bundle, opt, metrics = fn(bundle, opt, batch, s)
+        ema = (ema_beta * ema
+               + (1.0 - ema_beta) * metrics["accuracy"].astype(jnp.float32))
+        logs.append({"step": s, "accuracy": float(metrics["accuracy"]),
+                     "ema": float(ema), "loss": float(metrics["loss"]),
+                     "lr": float(metrics["lr"])})
+    jax.block_until_ready(bundle)
+    return state._replace(
+        bundle=bundle, opt_state=opt,
+        step=jnp.asarray(start + n_steps, jnp.int32),
+        acc_ema=ema.astype(jnp.float32)), logs

@@ -11,7 +11,7 @@ from typing import Callable, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, OptimizerConfig
+from repro.configs.base import OptimizerConfig
 from repro.dist.sharding import logical_constraint
 from repro.models.model import Model
 from repro.optim.api import init_optimizer

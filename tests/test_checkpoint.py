@@ -41,3 +41,22 @@ def test_missing_leaf_raises(tmp_path):
     save_pytree(p, {"a": jnp.ones(3)})
     with pytest.raises(KeyError):
         load_pytree(p, {"a": jnp.ones(3), "b": jnp.ones(2)})
+
+
+def test_shape_mismatch_raises_clearly(tmp_path):
+    """Resuming with a changed config (n_workers, model size) must fail
+    with an explicit shape message, not a downstream vmap trace error."""
+    p = str(tmp_path / "ckpt.msgpack")
+    save_pytree(p, {"a": jnp.ones((4, 2))})
+    with pytest.raises(ValueError, match="shape"):
+        load_pytree(p, {"a": jnp.ones((2, 2))})
+
+
+def test_save_is_atomic_no_tmp_left_behind(tmp_path):
+    import os
+    p = str(tmp_path / "ckpt.msgpack")
+    save_pytree(p, {"a": jnp.ones(3)})
+    save_pytree(p, {"a": jnp.zeros(3)})        # overwrite in place
+    assert sorted(os.listdir(tmp_path)) == ["ckpt.msgpack"]
+    out = load_pytree(p, {"a": jnp.ones(3)})
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.zeros(3))

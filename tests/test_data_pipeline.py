@@ -1,7 +1,5 @@
 """Data pipeline: determinism, per-worker ordering, epoch coverage."""
-import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.data.pipeline import Loader, make_gmm_images, make_markov_lm

@@ -1,6 +1,5 @@
 """Dry-run helpers that don't need 512 devices: input specs, FLOP
 accounting, shape applicability."""
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -1,0 +1,183 @@
+"""Checkpoint/resume: interrupting a SWAP run mid-phase-1 or mid-phase-2
+and resuming must reproduce the uninterrupted run bitwise — identical final
+parameters AND identical metric logs for the post-resume steps.
+
+The interruption is simulated faithfully: run an uninterrupted job with
+periodic snapshots, then copy its checkpoint directory and DELETE every
+snapshot written after the interruption point — exactly the on-disk state a
+killed process would leave — and launch a fresh SWAP with ``resume=True``.
+"""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.state import (Checkpointer, find_resume_point,
+                                    load_train_state, save_train_state)
+from repro.configs.base import (ModelConfig, OptimizerConfig, PhaseConfig,
+                                ScheduleConfig, SWAPConfig)
+from repro.core.adapters import LMAdapter
+from repro.core.swap import SWAP
+from repro.data.pipeline import Loader, make_markov_lm
+from repro.train.loop import init_train_state
+
+
+def tiny_lm() -> ModelConfig:
+    return ModelConfig(
+        name="tiny-lm", family="dense", n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=2, head_dim=8, d_ff=64, vocab_size=32, attention="gqa",
+        dtype="float32", remat=False, scan_layers=False)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.fixture(scope="module")
+def task():
+    cfg = tiny_lm()
+    data = make_markov_lm(0, vocab=cfg.vocab_size, n_train=128, n_test=64,
+                          seq_len=16)
+    train = {"tokens": data["train_tokens"], "labels": data["train_labels"]}
+    test_loader = Loader({"tokens": data["test_tokens"],
+                          "labels": data["test_labels"]}, 64)
+    adapter = LMAdapter(cfg, OptimizerConfig(kind="sgd"))
+    return adapter, train, test_loader
+
+
+def _swap_cfg(ckpt_dir: str) -> SWAPConfig:
+    # phase 1: batch 32 over 128 samples -> spe 4, 8 steps = chunks [4, 4],
+    #   snapshots at steps 4 and 8 (checkpoint_every=4)
+    # phase 2: batch 32 -> spe 4, 6 steps = chunks [4, 2], snapshot at 4
+    return SWAPConfig(
+        n_workers=2,
+        phase1=PhaseConfig(batch_size=32, max_steps=8,
+                           schedule=ScheduleConfig(kind="const", peak_lr=0.1)),
+        phase2=PhaseConfig(batch_size=32, max_steps=6,
+                           schedule=ScheduleConfig(kind="const",
+                                                   peak_lr=0.05)),
+        bn_recompute_batch_size=64, bn_recompute_batches=2, seed=0,
+        checkpoint_dir=ckpt_dir, checkpoint_every=4)
+
+
+@pytest.fixture(scope="module")
+def uninterrupted(task, tmp_path_factory):
+    adapter, train, test_loader = task
+    ckpt_dir = str(tmp_path_factory.mktemp("ckpts") / "run")
+    res = SWAP(adapter, _swap_cfg(ckpt_dir), train, test_loader).run(
+        jax.random.PRNGKey(0))
+    return ckpt_dir, res
+
+
+def _interrupt_dir(src: str, dst: str, keep) -> str:
+    """Copy a checkpoint dir, keeping only snapshots written before the
+    simulated kill (``keep(filename) -> bool``)."""
+    shutil.copytree(src, dst)
+    for name in os.listdir(dst):
+        if not keep(name):
+            os.remove(os.path.join(dst, name))
+    return dst
+
+
+def test_uninterrupted_run_writes_expected_snapshots(uninterrupted):
+    ckpt_dir, _ = uninterrupted
+    names = sorted(os.listdir(ckpt_dir))
+    assert "phase1-step00000004.msgpack" in names
+    assert "phase1-step00000008.msgpack" in names
+    assert "phase1_final-step00000008.msgpack" in names
+    assert "phase2-step00000004.msgpack" in names
+
+
+def test_resume_mid_phase1_is_bitwise_identical(task, uninterrupted,
+                                                tmp_path):
+    adapter, train, test_loader = task
+    src, res_a = uninterrupted
+    dst = _interrupt_dir(src, str(tmp_path / "mid_p1"),
+                         keep=lambda n: n.startswith("phase1-step00000004"))
+    res_b = SWAP(adapter, _swap_cfg(dst), train, test_loader).run(
+        jax.random.PRNGKey(0), resume=True)
+
+    _assert_trees_equal(res_a["final_bundle"]["params"],
+                        res_b["final_bundle"]["params"])
+    _assert_trees_equal(res_a["stacked_params"], res_b["stacked_params"])
+    # the resumed process re-executes steps 4..7; its metric log must match
+    # the tail of the uninterrupted log bitwise
+    tail_a = [e for e in res_a["phase1_log"] if e["step"] >= 4]
+    assert res_b["phase1_log"] == tail_a
+    assert res_b["phase1_steps"] == res_a["phase1_steps"]
+    assert res_b["after_avg_test_acc"] == res_a["after_avg_test_acc"]
+
+
+def test_resume_mid_phase2_is_bitwise_identical(task, uninterrupted,
+                                                tmp_path):
+    adapter, train, test_loader = task
+    src, res_a = uninterrupted
+    dst = _interrupt_dir(
+        src, str(tmp_path / "mid_p2"),
+        keep=lambda n: (n.startswith("phase1-")
+                        or n.startswith("phase1_final-")
+                        or n.startswith("phase2-step00000004")))
+    res_b = SWAP(adapter, _swap_cfg(dst), train, test_loader).run(
+        jax.random.PRNGKey(0), resume=True)
+
+    _assert_trees_equal(res_a["final_bundle"]["params"],
+                        res_b["final_bundle"]["params"])
+    _assert_trees_equal(res_a["stacked_params"], res_b["stacked_params"])
+    # phase 1 was not re-run: its summary metrics come from phase1_final
+    assert res_b["phase1_log"] == []
+    assert res_b["phase1_steps"] == res_a["phase1_steps"]
+    assert res_b["phase1_test_acc"] == res_a["phase1_test_acc"]
+    assert res_b["worker_test_accs"] == res_a["worker_test_accs"]
+    assert res_b["after_avg_test_acc"] == res_a["after_avg_test_acc"]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-layer units (no training)
+# ---------------------------------------------------------------------------
+
+
+def test_train_state_roundtrip_is_byte_exact(tmp_path):
+    bundle = {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                         "b": jnp.ones((4,), jnp.bfloat16)},
+              "state": {}}
+    opt = {"mu": jax.tree_util.tree_map(jnp.zeros_like, bundle["params"])}
+    state = init_train_state(bundle, opt, step=17, acc_ema=0.25)
+    path = str(tmp_path / "st.msgpack")
+    save_train_state(path, state, meta={"tag": "phase1", "step": 17})
+    out = load_train_state(path, state)
+    _assert_trees_equal(state, out)
+    assert int(np.asarray(out.step)) == 17
+
+
+def test_checkpointer_cadence_and_resume_priority(tmp_path):
+    bundle = {"params": {"w": jnp.zeros((2, 2))}, "state": {}}
+    opt = {"mu": {"w": jnp.zeros((2, 2))}}
+
+    def at(step):
+        return init_train_state(bundle, opt, step=step)
+
+    ck = Checkpointer(str(tmp_path), every=4, keep=2)
+    assert ck.maybe_save("phase1", at(2)) is None      # off-cadence
+    assert ck.maybe_save("phase1", at(4)) is not None
+    assert ck.maybe_save("phase1", at(4)) is None      # no duplicate
+    assert ck.maybe_save("phase1", at(8)) is not None
+    assert ck.maybe_save("phase1", at(12)) is not None
+    # keep=2 pruned the oldest rolling snapshot
+    names = [n for n in os.listdir(tmp_path) if n.endswith(".msgpack")]
+    assert sorted(names) == ["phase1-step00000008.msgpack",
+                             "phase1-step00000012.msgpack"]
+
+    ck.save("phase1_final", at(12))
+    assert find_resume_point(str(tmp_path))["tag"] == "phase1_final"
+    ck.maybe_save("phase2", at(4))
+    pt = find_resume_point(str(tmp_path))
+    assert (pt["tag"], pt["step"]) == ("phase2", 4)
+    assert pt["meta"]["tag"] == "phase2"
+
+    assert find_resume_point(str(tmp_path / "missing")) is None

@@ -2,7 +2,6 @@
 slot reuse, per-request positions."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import registry

@@ -1,7 +1,6 @@
 """Sharding rules + HLO collective parsing."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

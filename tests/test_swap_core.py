@@ -11,7 +11,8 @@ from repro.configs.base import (OptimizerConfig, PhaseConfig, ScheduleConfig,
 from repro.core.adapters import LMAdapter
 from repro.core.averaging import StreamingAverage, average_list, average_stacked
 from repro.core.schedules import schedule_fn
-from repro.core.swap import SWAP, _stack_batches, _stack_bundles
+from repro.core.swap import SWAP, _stack_bundles
+from repro.train.loop import stack_host_batches
 from repro.data.pipeline import Loader, make_markov_lm
 
 
@@ -135,8 +136,7 @@ def test_ensemble_step_equals_independent_runs(lm_setup):
     opt_stacked = jax.vmap(adapter.init_opt)(stacked)
     ens = jax.jit(jax.vmap(raw_step, in_axes=(0, 0, 0, None)))
     for step in range(3):
-        batches = _stack_batches([loader.batch(step, worker=w)
-                                  for w in range(W)])
+        batches = stack_host_batches(loader, step, W)
         stacked, opt_stacked, _ = ens(stacked, opt_stacked, batches, step)
 
     # sequential path
