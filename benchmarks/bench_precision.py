@@ -1,0 +1,173 @@
+"""Precision / accumulation benchmark: steps/sec + compiled peak-memory
+deltas for the phase-1 numerics configurations.
+
+Four variants of the same train step on the same task and data ordering,
+all through ``adapter.make_train_step`` + ``EpochRunner`` (the production
+path):
+
+  * ``f32``         — the pre-precision baseline (fused batch, f32 compute)
+  * ``bf16``        — bf16 compute, f32 master weights (``BF16`` preset)
+  * ``accum4``      — f32, the global batch as 4 sequential microbatches
+  * ``bf16_accum4`` — both levers together
+
+Speed is measured steps/sec (one warmup pass, compile excluded). Memory is
+the compiled program's ``memory_analysis().temp_size_in_bytes`` — the
+activation/workspace footprint, which is exactly what microbatch
+accumulation (and the bf16 activation halving) targets; argument bytes
+(params + device-resident data) are invariant across variants and reported
+for context. The temp numbers come from the XLA buffer assigner and are
+deterministic for a given config, so CI can track them tightly.
+
+Emits ``BENCH_precision.json`` with a ``tracked`` section consumed by
+``benchmarks/check_regression.py`` (CI bench job).
+
+  PYTHONPATH=src python benchmarks/bench_precision.py --smoke \
+      [--out BENCH_precision.json] [--min-mem-reduction 0.3]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs.base import ModelConfig, OptimizerConfig, ScheduleConfig
+from repro.core.adapters import LMAdapter
+from repro.core.schedules import schedule_fn
+from repro.data.pipeline import Loader, make_markov_lm
+from repro.train.loop import EpochRunner, init_train_state
+from repro.train.precision import BF16, F32
+
+VARIANTS = {
+    "f32": (F32, 1),
+    "bf16": (BF16, 1),
+    "accum4": (F32, 4),
+    "bf16_accum4": (BF16, 4),
+}
+
+
+def bench_model(smoke: bool) -> ModelConfig:
+    """Sized so activations (batch x seq x width) dominate the 2-layer
+    parameter set — the regime the memory levers target."""
+    scale = 1 if smoke else 2
+    return ModelConfig(
+        name="bench-precision-lm", family="dense", n_layers=2,
+        d_model=64 * scale, n_heads=4, n_kv_heads=2, head_dim=16 * scale,
+        d_ff=128 * scale, vocab_size=64, attention="gqa", dtype="float32",
+        remat=False, scan_layers=False)
+
+
+def _bench_variant(adapter, loader, sched, policy, k, steps: int):
+    step_fn = adapter.make_train_step(sched, policy=policy,
+                                      grad_accum_steps=k)
+    runner = EpochRunner(step_fn, loader, 0.9)
+    spe = loader.steps_per_epoch
+
+    def fresh():
+        bundle = adapter.init(jax.random.PRNGKey(0))
+        return init_train_state(bundle, adapter.init_opt(bundle),
+                                scale=policy.init_scale_state())
+
+    # static memory footprint of the compiled epoch chunk
+    compiled = runner._chunk_fn(spe).lower(fresh(), 0).compile()
+    ma = compiled.memory_analysis()
+    if ma is None:
+        # fail up front, not with a KeyError after the timed runs: the
+        # tracked contract of this benchmark IS the memory deltas
+        raise SystemExit(
+            "compiled.memory_analysis() returned no data on this "
+            "backend/jaxlib — bench_precision's tracked metrics are "
+            "peak-memory reductions and cannot be produced here")
+    mem = {"temp_bytes": int(ma.temp_size_in_bytes),
+           "argument_bytes": int(ma.argument_size_in_bytes),
+           "output_bytes": int(ma.output_size_in_bytes)}
+
+    def run(state):
+        done = 0
+        while done < steps:
+            n = min(spe, steps - done)
+            state, _ = runner.run_chunk(state, 0, n)
+            done += n
+        jax.block_until_ready(state.bundle)
+
+    run(fresh())                       # warmup: compiles both chunk lengths
+    state = fresh()
+    t0 = time.perf_counter()
+    run(state)
+    return dict(steps_per_sec=round(steps / (time.perf_counter() - t0), 2),
+                **mem)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (same config the acceptance bar uses)")
+    ap.add_argument("--steps", type=int, default=0,
+                    help="steps per variant (default: 96 smoke / 192 full)")
+    ap.add_argument("--out", default="BENCH_precision.json")
+    ap.add_argument("--min-mem-reduction", type=float, default=0.0,
+                    help="exit nonzero if the accum4 peak-memory reduction "
+                         "vs f32 fused falls below this fraction (the "
+                         "acceptance bar is 0.3; 0 = report only)")
+    args = ap.parse_args()
+
+    steps = args.steps or (96 if args.smoke else 192)
+    cfg = bench_model(args.smoke)
+    adapter = LMAdapter(cfg, OptimizerConfig(kind="sgd"))
+    data = make_markov_lm(0, vocab=cfg.vocab_size, n_train=512, n_test=64,
+                          seq_len=32 if args.smoke else 64)
+    train = {"tokens": data["train_tokens"], "labels": data["train_labels"]}
+    loader = Loader(train, 64, seed=0)
+    sched = schedule_fn(ScheduleConfig(kind="const", peak_lr=0.05))
+
+    variants = {}
+    for name, (policy, k) in VARIANTS.items():
+        variants[name] = _bench_variant(adapter, loader, sched, policy, k,
+                                        steps)
+        print(f"{name:12s} {variants[name]}")
+
+    base = variants["f32"]
+    for name, v in variants.items():
+        if name == "f32":
+            continue
+        v["speedup_vs_f32"] = round(v["steps_per_sec"]
+                                    / base["steps_per_sec"], 2)
+        v["peak_mem_reduction_vs_f32"] = round(
+            1.0 - v["temp_bytes"] / base["temp_bytes"], 3)
+
+    out = {
+        "config": {"model": cfg.name, "params": cfg.param_count(),
+                   "smoke": args.smoke, "steps": steps,
+                   "batch": loader.batch_size,
+                   "seq_len": int(train["tokens"].shape[1]),
+                   "backend": jax.default_backend(),
+                   "n_devices": len(jax.devices())},
+        "variants": variants,
+        # contract consumed by benchmarks/check_regression.py: temp-memory
+        # reductions are buffer-assigner facts (deterministic per config),
+        # so they are marked stable and tracked tightly vs the baseline;
+        # steps/sec ratios stay informational on shared CI runners
+        "tracked": {
+            "accum4_peak_mem_reduction": {
+                "value": variants["accum4"]["peak_mem_reduction_vs_f32"],
+                "floor": 0.3, "stable": True},
+            "bf16_accum4_peak_mem_reduction": {
+                "value": variants["bf16_accum4"]
+                ["peak_mem_reduction_vs_f32"],
+                "floor": 0.3, "stable": True},
+        },
+    }
+    print(json.dumps(out, indent=1))
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}")
+    got = variants["accum4"]["peak_mem_reduction_vs_f32"]
+    if args.min_mem_reduction and got < args.min_mem_reduction:
+        raise SystemExit(
+            f"accum4 peak-memory reduction {got:.0%} below the "
+            f"{args.min_mem_reduction:.0%} bar")
+
+
+if __name__ == "__main__":
+    main()

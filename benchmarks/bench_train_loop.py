@@ -34,6 +34,7 @@ from repro.data.pipeline import Loader, make_markov_lm
 from repro.train.loop import (EpochRunner, init_train_state,
                               python_loop_reference, stack_host_batches,
                               stack_train_state)
+from repro.train.precision import default_scale_state, stack_scale_state
 
 
 def bench_model(smoke: bool) -> ModelConfig:
@@ -97,14 +98,16 @@ def _time_python_phase2(step_fn, loader, adapter, steps: int,
                         n_workers: int) -> float:
     """The replaced SWAP phase-2 loop: host builds + stacks W batches, then
     dispatches one jitted vmapped step, every step."""
-    ens_step = jax.jit(jax.vmap(step_fn, in_axes=(0, 0, 0, None)),
+    ens_step = jax.jit(jax.vmap(step_fn, in_axes=(0, 0, 0, None, 0)),
                        donate_argnums=(0, 1))
 
     def run(state, n):
         stacked, opt = state.bundle, state.opt_state
+        scale = stack_scale_state(default_scale_state(), n_workers)
         for step in range(n):
             batches = stack_host_batches(loader, step, n_workers)
-            stacked, opt, _ = ens_step(stacked, opt, batches, step)
+            stacked, opt, scale, _ = ens_step(stacked, opt, batches, step,
+                                              scale)
         jax.block_until_ready(stacked)
 
     run(_phase2_setup(adapter, loader, n_workers), min(4, steps))  # warmup
@@ -185,6 +188,16 @@ def main():
         "phase2": {"python_steps_per_sec": round(p2_py, 2),
                    "scan_steps_per_sec": round(p2_scan, 2),
                    "speedup": round(p2_scan / p2_py, 2)},
+        # contract consumed by benchmarks/check_regression.py (CI bench
+        # job): each tracked metric must land at or above its floor; floors
+        # sit well under the checked-in values to tolerate shared-runner
+        # noise while still catching a real regression
+        "tracked": {
+            "phase1_speedup": {"value": round(p1_scan / p1_py, 2),
+                               "floor": 1.0},
+            "phase2_speedup": {"value": round(p2_scan / p2_py, 2),
+                               "floor": 1.2},
+        },
     }
     print(json.dumps(out, indent=1))
     with open(args.out, "w") as f:

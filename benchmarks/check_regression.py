@@ -1,0 +1,116 @@
+"""Enforce benchmark floors + print the perf trajectory (CI bench job).
+
+Compares a freshly produced benchmark JSON against the checked-in
+``BENCH_*.json`` baseline. The contract is the ``tracked`` section both
+files carry — ``{metric: {"value": v, "floor": f, "stable": bool?}}``,
+higher is better:
+
+  * every tracked metric must land at or above the BASELINE's floor (the
+    checked-in floor is the repo's promise; a fresh run can't weaken it);
+  * metrics marked ``"stable": true`` (deterministic facts like compiled
+    peak-memory reductions) must additionally not FALL more than
+    ``--tolerance`` (default 20%) below the checked-in value — a drop
+    there is a real regression, not runner noise. Upward drift past the
+    same tolerance doesn't fail (it may be a genuine improvement) but is
+    flagged in the table as a stale baseline to refresh. Timing ratios
+    are left un-pinned to the baseline because shared CI runners wobble;
+    their floors still bind.
+
+Prints a trajectory table (baseline -> fresh, delta) and appends it as
+markdown to ``$GITHUB_STEP_SUMMARY`` when set.
+
+  python benchmarks/check_regression.py \
+      --baseline BENCH_precision.json --fresh /tmp/bench_precision.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_tracked(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    tracked = data.get("tracked")
+    if not tracked:
+        raise SystemExit(f"{path} has no 'tracked' section — regenerate it "
+                         f"with the current benchmark script")
+    return tracked
+
+
+def check(baseline: dict, fresh: dict, tolerance: float):
+    """Returns (rows, failures). Each row: (metric, base, new, min_allowed,
+    ok)."""
+    rows, failures = [], []
+    for name, b in sorted(baseline.items()):
+        if name not in fresh:
+            failures.append(f"tracked metric {name!r} missing from fresh "
+                            f"run — did the benchmark change shape?")
+            continue
+        new = float(fresh[name]["value"])
+        base = float(b["value"])
+        min_allowed = float(b.get("floor", 0.0))
+        if b.get("stable"):
+            min_allowed = max(min_allowed, base * (1.0 - tolerance))
+        ok = new >= min_allowed
+        if not ok:
+            failures.append(
+                f"{name}: {new} below minimum {min_allowed:.3f} "
+                f"(baseline {base}, floor {b.get('floor')})")
+        stale = (b.get("stable") and base
+                 and new > base * (1.0 + tolerance))
+        rows.append((name + (" (refresh baseline?)" if stale else ""),
+                     base, new, min_allowed, ok))
+    for name in sorted(set(fresh) - set(baseline)):
+        rows.append((f"{name} (new)", float("nan"),
+                     float(fresh[name]["value"]),
+                     float(fresh[name].get("floor", 0.0)), True))
+    return rows, failures
+
+
+def render(rows, title: str) -> str:
+    lines = [f"### {title}", "",
+             "| metric | baseline | fresh | min allowed | Δ vs baseline | |",
+             "|---|---|---|---|---|---|"]
+    for name, base, new, min_allowed, ok in rows:
+        delta = "" if base != base else f"{(new - base) / base:+.1%}"
+        mark = "✅" if ok else "❌"
+        base_s = "—" if base != base else f"{base}"
+        lines.append(f"| {name} | {base_s} | {new} | {min_allowed:.3f} "
+                     f"| {delta} | {mark} |")
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="checked-in BENCH_*.json")
+    ap.add_argument("--fresh", required=True,
+                    help="result JSON from this run")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional drop vs baseline for metrics "
+                         "marked stable (default 0.2)")
+    args = ap.parse_args()
+
+    rows, failures = check(load_tracked(args.baseline),
+                           load_tracked(args.fresh), args.tolerance)
+    table = render(rows, f"Perf trajectory: {os.path.basename(args.baseline)}")
+    print(table)
+
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(table + "\n")
+
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"{len(rows)} tracked metrics within bounds "
+          f"({os.path.basename(args.baseline)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,10 +18,10 @@ import jax
 
 from repro.configs import registry
 from repro.configs.base import (OptimizerConfig, PhaseConfig,
-                                SWAConfig, ScheduleConfig, SWAPConfig)
+                                ScheduleConfig, SWAConfig, SWAPConfig)
 from repro.core.adapters import CNNAdapter, LMAdapter
 from repro.core.swa import SWA
-from repro.core.swap import SGDRun, SWAP
+from repro.core.swap import SWAP, SGDRun
 from repro.data.pipeline import Loader, make_gmm_images, make_markov_lm
 
 

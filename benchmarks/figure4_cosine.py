@@ -14,6 +14,7 @@ from repro.configs.base import ScheduleConfig
 from repro.core.averaging import average_list
 from repro.core.schedules import schedule_fn
 from repro.data.pipeline import Loader
+from repro.train.precision import default_scale_state
 
 STEPS = 240        # long enough that training actually converges — the
                    # decay is a LATE-training phenomenon (paper Fig. 4)
@@ -34,6 +35,7 @@ def run(verbose=True):
 
     bundle = adapter.init(jax.random.PRNGKey(0))
     opt_state = adapter.init_opt(bundle)
+    scale = default_scale_state()
 
     # record trajectory + gradients
     params_hist, grads_hist = [], []
@@ -43,7 +45,8 @@ def run(verbose=True):
         batch = loader.batch(step)
         params_hist.append(bundle["params"])
         grads_hist.append(grad_fn(bundle["params"], bundle["state"], batch))
-        bundle, opt_state, _ = step_fn(bundle, opt_state, batch, step)
+        bundle, opt_state, scale, _ = step_fn(bundle, opt_state, batch,
+                                              step, scale)
 
     # SWAP point: average of tail iterates (stand-in for the worker average)
     theta_swap = _flat(average_list(params_hist[STEPS // 2:]))

@@ -11,7 +11,7 @@ import jax
 from repro.configs import registry
 from repro.configs.base import (OptimizerConfig, PhaseConfig, ScheduleConfig,
                                 SWAPConfig)
-from repro.core import CNNAdapter, SWAP
+from repro.core import SWAP, CNNAdapter
 from repro.data.pipeline import Loader, make_gmm_images
 
 

@@ -19,7 +19,7 @@ import jax
 from repro.configs import registry
 from repro.configs.base import (ModelConfig, OptimizerConfig, PhaseConfig,
                                 ScheduleConfig, SWAPConfig)
-from repro.core import LMAdapter, SWAP
+from repro.core import SWAP, LMAdapter
 from repro.data.pipeline import Loader, make_markov_lm
 
 
@@ -40,6 +40,9 @@ def main():
     ap.add_argument("--steps1", type=int, default=200)
     ap.add_argument("--steps2", type=int, default=60)
     ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--phase1-precision", default="float32",
+                    choices=["float32", "bfloat16", "float16"])
+    ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
@@ -69,6 +72,8 @@ def main():
     swap_cfg = SWAPConfig(
         n_workers=args.workers,
         phase1=PhaseConfig(batch_size=64, max_steps=steps1, stop_accuracy=0.7,
+                           precision=args.phase1_precision,
+                           grad_accum_steps=args.grad_accum,
                            schedule=ScheduleConfig(kind="warmup_linear",
                                                    peak_lr=0.5,
                                                    warmup_steps=steps1 // 5,

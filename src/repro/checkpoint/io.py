@@ -45,8 +45,14 @@ def save_pytree(path: str, tree: Any) -> None:
     atomic_write(path, msgpack.packb(payload, use_bin_type=True))
 
 
-def load_pytree(path: str, template: Any):
-    """Restore into the structure of ``template`` (values are replaced)."""
+def load_pytree(path: str, template: Any, optional_prefixes: tuple = ()):
+    """Restore into the structure of ``template`` (values are replaced).
+
+    Leaves whose key starts with one of ``optional_prefixes`` fall back to
+    the template's value when the snapshot predates them (forward compat
+    for additive TrainState fields — e.g. the loss-scale state); all other
+    missing leaves stay a hard error.
+    """
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
 
@@ -57,6 +63,9 @@ def load_pytree(path: str, template: Any):
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in pth)
         if key not in payload:
+            if key.startswith(optional_prefixes or ()):
+                new_leaves.append(leaf)
+                continue
             raise KeyError(f"checkpoint missing leaf {key!r}")
         rec = payload[key]
         want = tuple(getattr(leaf, "shape", np.shape(leaf)))

@@ -62,8 +62,14 @@ def save_train_state(path: str, state: TrainState,
 def load_train_state(path: str, template: TrainState) -> TrainState:
     """Restore a TrainState into the structure/shapes of ``template`` (built
     by the resuming process from the same config — e.g. the freshly stacked
-    phase-2 state for a mid-phase-2 restore)."""
-    tree = load_pytree(path, _state_tree(template))
+    phase-2 state for a mid-phase-2 restore).
+
+    Snapshots written before the precision subsystem carry no ``scale``
+    leaves; those backfill from the template (the policy's initial
+    loss-scale state), so old checkpoints stay resumable — bit-exact for
+    f32 runs, where the scale state is a constant."""
+    tree = load_pytree(path, _state_tree(template),
+                       optional_prefixes=("scale/",))
     return TrainState(**tree)
 
 

@@ -1,8 +1,8 @@
 from repro.configs.base import (
-    ARCH_FAMILIES, LONG_CONTEXT_ARCHS, MLAConfig, MeshConfig, ModelConfig,
-    MoEConfig, MULTI_POD, OptimizerConfig, PhaseConfig, SHAPES, SINGLE_POD,
-    SSMConfig, ScheduleConfig, ShapeConfig, SWAConfig, SWAPConfig, TrainConfig,
-    replace, shape_applicable,
+    ARCH_FAMILIES, LONG_CONTEXT_ARCHS, MULTI_POD, SHAPES, SINGLE_POD,
+    MeshConfig, MLAConfig, ModelConfig, MoEConfig, OptimizerConfig,
+    PhaseConfig, ScheduleConfig, ShapeConfig, SSMConfig, SWAConfig,
+    SWAPConfig, TrainConfig, replace, shape_applicable,
 )
 from repro.configs.registry import (
     ASSIGNED_ARCHS, all_configs, get_config, get_smoke_config, list_archs,

@@ -301,7 +301,11 @@ class OptimizerConfig:
     eps: float = 1e-8
     # lars
     trust_coefficient: float = 0.001
-    grad_dtype: str = "float32"    # "bfloat16" to halve gradient all-reduce bytes
+    # DEPRECATED: set PhaseConfig.precision / PrecisionPolicy.grad_dtype
+    # instead. Still parsed (resolve_policy folds it into the policy, and
+    # the cast now happens inside the precision step — after unscaling,
+    # before the data-axis psum — rather than as a loose post-grad cast).
+    grad_dtype: str = "float32"
 
 
 @dataclass(frozen=True)
@@ -313,6 +317,20 @@ class PhaseConfig:
     max_steps: int = 1000
     stop_accuracy: float = 1.01    # phase-1 early exit threshold τ (>1 = never)
     accuracy_ema: float = 0.9      # smoothing for the stopping criterion
+    # numerics (repro.train.precision): PrecisionPolicy preset name —
+    # "float32" | "bfloat16" | "float16" (f16 adds dynamic loss scaling
+    # with inf/nan step skipping). Phase 2 should stay "float32" so the
+    # averaging/generalization claims are untouched; phase 1 is where the
+    # large-batch compute lives.
+    precision: str = "float32"
+    # microbatch accumulation: split each global batch into this many
+    # sequential microbatches inside the step (inner lax.scan) — identical
+    # effective batch size for the gradient, ~grad_accum_steps× smaller
+    # activation memory, so phase-1 batches larger than device memory
+    # still run. Caveat: BatchNorm statistics become per-microbatch (see
+    # docs/training.md §Precision & accumulation); fused-step equivalence
+    # holds exactly only for stateless models.
+    grad_accum_steps: int = 1
 
 
 @dataclass(frozen=True)

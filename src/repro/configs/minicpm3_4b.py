@@ -1,5 +1,5 @@
 """minicpm3-4b [dense] — MLA (multi-head latent attention). [hf:openbmb/MiniCPM3-4B]"""
-from repro.configs.base import ModelConfig, MLAConfig
+from repro.configs.base import MLAConfig, ModelConfig
 
 ARCH_ID = "minicpm3-4b"
 

@@ -6,4 +6,4 @@ from repro.core.averaging import (
 )
 from repro.core.schedules import schedule_fn
 from repro.core.swa import SWA
-from repro.core.swap import SGDRun, SWAP
+from repro.core.swap import SWAP, SGDRun

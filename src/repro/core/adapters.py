@@ -9,8 +9,9 @@ A *bundle* is {"params": trainable pytree, "state": non-trainable pytree}
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +23,9 @@ from repro.data.pipeline import Loader
 from repro.models import cnn as cnn_mod
 from repro.models.model import Model
 from repro.optim.api import init_optimizer
+from repro.train.precision import (
+    PrecisionPolicy, make_precision_train_step,
+)
 from repro.train.steps import lm_loss_and_metrics
 
 
@@ -40,18 +44,27 @@ class LMAdapter:
     def init_opt(self, bundle):
         return self.opt_init(bundle["params"])
 
-    def make_train_step(self, schedule_fn: Callable):
-        def train_step(bundle, opt_state, batch, step):
-            def loss_fn(p):
-                return lm_loss_and_metrics(self.model, p, batch)
-            (_, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(bundle["params"])
-            lr = schedule_fn(step)
-            new_p, new_opt = self._opt_update(grads, opt_state,
-                                              bundle["params"], lr)
-            return {"params": new_p, "state": {}}, new_opt, dict(metrics,
-                                                                 lr=lr)
-        return train_step
+    def make_train_step(self, schedule_fn: Callable,
+                        policy: Optional[PrecisionPolicy] = None,
+                        grad_accum_steps: int = 1):
+        """Engine-facing train step (5-arg precision signature). The LM
+        already casts per-matmul from ``ModelConfig.dtype`` (``mdot``), so
+        a reduced-precision policy threads its compute dtype through the
+        model config — master params stay f32 in HBM and in the optimizer —
+        and ``cast_inputs`` stays off (token batches are integers)."""
+        model = self.model
+        if (policy is not None and policy.casts_compute
+                and self.cfg.dtype != policy.compute_dtype):
+            model = Model(dataclasses.replace(
+                self.cfg, dtype=policy.compute_dtype))
+
+        def loss_with_aux(params, state, batch):
+            total, metrics = lm_loss_and_metrics(model, params, batch)
+            return total, (metrics, state)
+
+        return make_precision_train_step(
+            loss_with_aux, self._opt_update, schedule_fn, policy=policy,
+            grad_accum_steps=grad_accum_steps, cast_inputs=False)
 
     @functools.partial(jax.jit, static_argnums=(0,))
     def _eval_batch(self, bundle, batch):
@@ -90,6 +103,10 @@ class CNNAdapter:
         images = batch["images"]
         if "aug_seed" in batch:
             images = augment_images(images, batch["aug_seed"])
+        # augmentation math runs f32 (jax.random upcasts); re-align the
+        # images with the (possibly reduced-precision) params so the conv
+        # sees one compute dtype — a no-op for the f32 policy
+        images = images.astype(jax.tree_util.tree_leaves(params)[0].dtype)
         logits, new_state = cnn_mod.apply_cnn(params, state, images,
                                               self.cfg, train=True)
         labels = batch["labels"]
@@ -99,17 +116,17 @@ class CNNAdapter:
         return loss, ({"loss": loss, "accuracy": acc,
                        "aux": jnp.zeros((), jnp.float32)}, new_state)
 
-    def make_train_step(self, schedule_fn: Callable):
-        def train_step(bundle, opt_state, batch, step):
-            (_, (metrics, new_state)), grads = jax.value_and_grad(
-                self._loss, has_aux=True)(bundle["params"], bundle["state"],
-                                          batch)
-            lr = schedule_fn(step)
-            new_p, new_opt = self._opt_update(grads, opt_state,
-                                              bundle["params"], lr)
-            return ({"params": new_p, "state": new_state}, new_opt,
-                    dict(metrics, lr=lr))
-        return train_step
+    def make_train_step(self, schedule_fn: Callable,
+                        policy: Optional[PrecisionPolicy] = None,
+                        grad_accum_steps: int = 1):
+        """Engine-facing train step. The CNN has no per-op compute-dtype
+        plumbing, so reduced-precision policies pre-cast params + batch
+        (``cast_inputs=True``); BN running stats are cast back to their
+        master dtype inside the precision step so the scan carry — and
+        checkpoints — stay dtype-stable."""
+        return make_precision_train_step(
+            self._loss, self._opt_update, schedule_fn, policy=policy,
+            grad_accum_steps=grad_accum_steps, cast_inputs=True)
 
     @functools.partial(jax.jit, static_argnums=(0,))
     def _eval_batch(self, bundle, batch):

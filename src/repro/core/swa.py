@@ -13,6 +13,7 @@ from repro.configs.base import SWAConfig
 from repro.core.averaging import StreamingAverage
 from repro.core.schedules import schedule_fn as make_schedule
 from repro.data.pipeline import Loader
+from repro.train.precision import default_scale_state
 
 
 class SWA:
@@ -34,14 +35,15 @@ class SWA:
                           donate_argnums=(0, 1))
         opt_state = opt_state if opt_state is not None \
             else adapter.init_opt(bundle)
+        scale = default_scale_state()   # SWA baseline trains plain f32
 
         t0 = time.perf_counter()
         avg = StreamingAverage()
         total_steps = cfg.n_samples * cfg.cycle_steps
         for step in range(total_steps):
             batch = loader.batch(step)
-            bundle, opt_state, metrics = step_fn(bundle, opt_state, batch,
-                                                 step)
+            bundle, opt_state, scale, metrics = step_fn(
+                bundle, opt_state, batch, step, scale)
             if (step + 1) % cfg.cycle_steps == 0:
                 avg.add(bundle["params"])
         last_acc = adapter.eval_accuracy(bundle, self.test_loader)

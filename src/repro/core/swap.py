@@ -43,9 +43,11 @@ from repro.dist.sharding import ensemble_shardings
 from repro.train.loop import (
     EpochRunner, TrainState, init_train_state, run_phase, stack_train_state,
 )
+from repro.train.precision import resolve_policy
 
 _PHASE1_SUMMARY_KEYS = ("phase1_steps", "phase1_train_acc", "phase1_time",
-                        "phase1_test_acc")
+                        "phase1_test_acc", "phase1_skipped_steps",
+                        "phase1_loss_scale")
 
 
 def _stack_bundles(bundle, n: int):
@@ -72,16 +74,20 @@ class SGDRun:
         self.phase = phase
         self.loader = Loader(train_arrays, phase.batch_size, seed=seed)
         sched = make_schedule(phase.schedule)
-        self.runner = EpochRunner(adapter.make_train_step(sched), self.loader,
-                                  phase.accuracy_ema,
-                                  unroll=_engine_unroll(adapter))
+        self.policy = resolve_policy(phase.precision, adapter.opt_cfg)
+        self.runner = EpochRunner(
+            adapter.make_train_step(sched, policy=self.policy,
+                                    grad_accum_steps=phase.grad_accum_steps),
+            self.loader, phase.accuracy_ema,
+            unroll=_engine_unroll(adapter))
 
     def init_state(self, bundle, opt_state=None, start_step: int = 0,
                    phase_tag: str = "phase1") -> TrainState:
         opt_state = opt_state if opt_state is not None \
             else self.adapter.init_opt(bundle)
         return init_train_state(bundle, opt_state, step=start_step,
-                                phase=phase_tag)
+                                phase=phase_tag,
+                                scale=self.policy.init_scale_state())
 
     def run(self, bundle, opt_state=None, start_step: int = 0,
             log: Optional[list] = None, worker: int = 0,
@@ -126,12 +132,13 @@ class SWAP:
     # phase 2 state assembly / restore
     # ------------------------------------------------------------------
 
-    def _phase2_init_state(self, bundle) -> TrainState:
+    def _phase2_init_state(self, bundle, policy) -> TrainState:
         W = self.cfg.n_workers
         stacked = _stack_bundles(bundle, W)
         opt_stacked = jax.vmap(self.adapter.init_opt)(stacked)
         return stack_train_state(stacked, opt_stacked, W,
-                                 seed=self.cfg.seed + 2)
+                                 seed=self.cfg.seed + 2,
+                                 scale=policy.init_scale_state())
 
     def run(self, key, collect_curves: bool = False,
             resume: bool = False) -> Dict:
@@ -183,6 +190,11 @@ class SWAP:
             bundle = state1.bundle
             results["phase1_steps"] = int(np.asarray(state1.step))
             results["phase1_train_acc"] = float(np.asarray(state1.acc_ema))
+            # loss-scale diagnostics (trivial — 0 skips, scale 1 — for f32)
+            results["phase1_skipped_steps"] = int(
+                np.asarray(state1.scale.skipped))
+            results["phase1_loss_scale"] = float(
+                np.asarray(state1.scale.scale))
             results["phase1_time"] = prior_t1 + time.perf_counter() - t0
             results["phase1_test_acc"] = adapter.eval_accuracy(
                 bundle, self.test_loader)
@@ -194,12 +206,19 @@ class SWAP:
         W = cfg.n_workers
         loader2 = Loader(self.train_arrays, cfg.phase2.batch_size,
                          seed=cfg.seed + 1)
+        # phase 2 defaults to f32 (PhaseConfig.precision): small batches
+        # don't need the memory/compute levers, and keeping the refinement
+        # trajectories full-precision leaves the paper's averaging /
+        # generalization claims untouched
+        policy2 = resolve_policy(cfg.phase2.precision, adapter.opt_cfg)
         runner2 = EpochRunner(
-            adapter.make_train_step(make_schedule(cfg.phase2.schedule)),
+            adapter.make_train_step(
+                make_schedule(cfg.phase2.schedule), policy=policy2,
+                grad_accum_steps=cfg.phase2.grad_accum_steps),
             loader2, cfg.phase2.accuracy_ema, ensemble=True,
             unroll=_engine_unroll(adapter))
 
-        state2 = self._phase2_init_state(bundle)
+        state2 = self._phase2_init_state(bundle, policy2)
         prior_t2 = 0.0
         if resume_pt is not None and resume_pt["tag"] == "phase2":
             state2 = load_train_state(resume_pt["path"], state2)

@@ -29,15 +29,17 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, registry, shape_applicable
-from repro.configs.base import ModelConfig, OptimizerConfig, ShapeConfig
+from repro.configs.base import (
+    ModelConfig, OptimizerConfig, ScheduleConfig, ShapeConfig,
+)
 from repro.core.schedules import schedule_fn
-from repro.configs.base import ScheduleConfig
 from repro.dist.sharding import (
     assert_no_cross_worker_collectives, batch_shardings, cache_shardings,
     collective_bytes, param_shardings, set_mesh,
 )
 from repro.launch.mesh import make_production_mesh, make_worker_mesh
 from repro.models.model import Model
+from repro.train.precision import resolve_policy
 from repro.train.steps import make_lm_train_step
 
 # TPU v5e hardware constants (per chip)
@@ -76,7 +78,8 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
     return mult * n_active * tokens
 
 
-def _jit_for_shape(model: Model, cfg: ModelConfig, shape: ShapeConfig, mesh):
+def _jit_for_shape(model: Model, cfg: ModelConfig, shape: ShapeConfig, mesh,
+                   precision: str = "float32", grad_accum_steps: int = 1):
     """Build (jitted_fn, example_args) for the step this shape exercises."""
     specs = input_specs(cfg, shape)
     params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
@@ -87,7 +90,9 @@ def _jit_for_shape(model: Model, cfg: ModelConfig, shape: ShapeConfig, mesh):
     if shape.kind == "train":
         opt_cfg = OptimizerConfig(kind="sgd")
         opt_init, train_step = make_lm_train_step(
-            model, opt_cfg, schedule_fn(ScheduleConfig(kind="const")))
+            model, opt_cfg, schedule_fn(ScheduleConfig(kind="const")),
+            policy=resolve_policy(precision, opt_cfg),
+            grad_accum_steps=grad_accum_steps)
         opt_shape = jax.eval_shape(opt_init, params_shape)
         o_sh = param_shardings(mesh, opt_shape)
         fn = jax.jit(
@@ -139,7 +144,8 @@ def _terms_from_compiled(compiled) -> dict:
 
 
 def roofline_extrapolated(arch: str, shape: ShapeConfig, mesh,
-                          cfg: ModelConfig) -> dict:
+                          cfg: ModelConfig, precision: str = "float32",
+                          grad_accum_steps: int = 1) -> dict:
     """XLA's cost_analysis counts a scan body ONCE (trip count ignored), so
     the production scan-lowered program under-reports flops/bytes/collective
     bytes. We recover exact totals by lowering two small UNROLLED variants —
@@ -163,7 +169,9 @@ def roofline_extrapolated(arch: str, shape: ShapeConfig, mesh,
         # against the ambient mesh and silently no-ops without it — which
         # would probe an unconstrained (partial-sum-heavy) program.
         with set_mesh(mesh):
-            fn, args = _jit_for_shape(vmodel, vcfg, shape, mesh)
+            fn, args = _jit_for_shape(vmodel, vcfg, shape, mesh,
+                                      precision=precision,
+                                      grad_accum_steps=grad_accum_steps)
             return _terms_from_compiled(fn.lower(*args).compile())
 
     if n_units <= 8:
@@ -197,11 +205,20 @@ def roofline_extrapolated(arch: str, shape: ShapeConfig, mesh,
 
 
 def run_one(arch: str, shape_name: str, mesh_kind: str,
-            phase2: bool = False, n_workers: int = 8) -> dict:
+            phase2: bool = False, n_workers: int = 8,
+            precision: str = "float32", grad_accum_steps: int = 1) -> dict:
     cfg = registry.get_config(arch)
+    if precision not in ("float32", "", "f32", "fp32"):
+        # thread the compute dtype through the model's per-matmul casts,
+        # same as the LM adapter's training path
+        import dataclasses as dc
+        cfg = dc.replace(
+            cfg, dtype=resolve_policy(precision).compute_dtype)
     shape = SHAPES[shape_name]
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
-           "phase2": phase2, "status": "ok"}
+           "phase2": phase2, "status": "ok",
+           "precision": precision or "float32",
+           "grad_accum_steps": grad_accum_steps}
     if not shape_applicable(arch, cfg.family, shape):
         rec["status"] = "skipped"
         rec["reason"] = ("full-attention arch: long_500k requires "
@@ -228,7 +245,9 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
                                              n_workers)
         ctx_mesh = block_mesh
     else:
-        fn, args = _jit_for_shape(model, cfg, shape, mesh)
+        fn, args = _jit_for_shape(model, cfg, shape, mesh,
+                                  precision=precision,
+                                  grad_accum_steps=grad_accum_steps)
         ctx_mesh = mesh
     with set_mesh(ctx_mesh):
         lowered = fn.lower(*args)
@@ -247,7 +266,9 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
     if phase2:
         extra = _terms_from_compiled(compiled)  # structure check only
     else:
-        extra = roofline_extrapolated(arch, shape, mesh, cfg)
+        extra = roofline_extrapolated(arch, shape, mesh, cfg,
+                                      precision=precision,
+                                      grad_accum_steps=grad_accum_steps)
     t4 = time.perf_counter()
 
     flops_dev = extra["flops"]
@@ -349,6 +370,13 @@ def main():
                     default="both")
     ap.add_argument("--phase2", action="store_true")
     ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--precision", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="train-shape numerics: bf16 compute + f32 master "
+                         "weights (f16's dynamic scaling is stateful — "
+                         "engine-only, not AOT-lowerable here)")
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="train-shape microbatch accumulation factor")
     ap.add_argument("--out", default="results/dryrun.json")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
@@ -366,14 +394,20 @@ def main():
         for shape in args.shape:
             for mesh_kind in meshes:
                 key = f"{arch}|{shape}|{mesh_kind}" + \
-                    ("|phase2" if args.phase2 else "")
+                    ("|phase2" if args.phase2 else "") + \
+                    (f"|{args.precision}" if args.precision != "float32"
+                     else "") + \
+                    (f"|accum{args.grad_accum}" if args.grad_accum > 1
+                     else "")
                 if args.skip_existing and results.get(key, {}).get("status") == "ok":
                     print(f"[skip] {key}")
                     continue
                 print(f"[dryrun] {key} ...", flush=True)
                 try:
                     rec = run_one(arch, shape, mesh_kind, phase2=args.phase2,
-                                  n_workers=args.workers)
+                                  n_workers=args.workers,
+                                  precision=args.precision,
+                                  grad_accum_steps=args.grad_accum)
                 except Exception as e:  # noqa: BLE001
                     rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
                            "status": "error", "error": f"{type(e).__name__}: {e}",

@@ -8,7 +8,13 @@ dry-run). The same controller drives the TPU path: phase 1 on the
   PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
       [--full] [--workers 4] [--phase1-steps 150] [--phase2-steps 60] \
       [--stop-acc 0.6] [--optimizer sgd|lars|adamw] [--save out.ckpt] \
+      [--phase1-precision bfloat16] [--grad-accum 4] \
       [--checkpoint-dir ckpts/ --checkpoint-every 50] [--resume]
+
+Large phase-1 batches: --phase1-precision bfloat16 computes the forward/
+backward in bf16 with f32 master weights; --grad-accum k runs each global
+batch as k sequential microbatches (same effective batch, ~k× less
+activation memory). See docs/training.md §Precision & accumulation.
 
 Long jobs: pass --checkpoint-dir/--checkpoint-every for periodic TrainState
 snapshots (epoch-aligned), then relaunch with --resume to continue
@@ -46,6 +52,19 @@ def main():
     ap.add_argument("--peak-lr", type=float, default=0.5)
     ap.add_argument("--optimizer", default="sgd",
                     choices=["sgd", "lars", "adamw"])
+    ap.add_argument("--phase1-precision", default="float32",
+                    choices=["float32", "bfloat16", "float16"],
+                    help="phase-1 PrecisionPolicy preset (bf16 compute + "
+                         "f32 master weights; f16 adds dynamic loss "
+                         "scaling with inf/nan step skipping)")
+    ap.add_argument("--phase2-precision", default="float32",
+                    choices=["float32", "bfloat16", "float16"],
+                    help="phase-2 preset; keep f32 (default) to leave the "
+                         "averaging/generalization claims untouched")
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="phase-1 microbatch accumulation: split each "
+                         "global batch into this many sequential "
+                         "microbatches (identical effective batch size)")
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--save", default="")
@@ -86,11 +105,14 @@ def main():
         phase1=PhaseConfig(
             batch_size=args.phase1_batch, max_steps=args.phase1_steps,
             stop_accuracy=args.stop_acc,
+            precision=args.phase1_precision,
+            grad_accum_steps=args.grad_accum,
             schedule=ScheduleConfig(kind="warmup_linear", peak_lr=args.peak_lr,
                                     warmup_steps=args.phase1_steps // 5,
                                     total_steps=args.phase1_steps)),
         phase2=PhaseConfig(
             batch_size=args.phase2_batch, max_steps=args.phase2_steps,
+            precision=args.phase2_precision,
             schedule=ScheduleConfig(kind="warmup_linear", peak_lr=lr_small,
                                     warmup_steps=0,
                                     total_steps=args.phase2_steps)),

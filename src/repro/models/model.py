@@ -29,8 +29,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import logical_constraint
-from repro.models import attention as attn
-from repro.models import mamba2, moe
+from repro.models import attention as attn, mamba2, moe
 from repro.models.layers import (
     apply_mlp, apply_norm, dense_init, embed_init, init_mlp, init_norm, mdot,
     sinusoidal_embedding,

@@ -15,13 +15,13 @@ def init(params):
 
 
 def update(grads, state, params, lr, cfg: OptimizerConfig):
+    """Gradients arrive pre-cast to the master param dtype (optim.api)."""
     b1, b2, eps, wd = cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay
     count = state["count"] + 1
     c1 = 1.0 - b1 ** count.astype(jnp.float32)
     c2 = 1.0 - b2 ** count.astype(jnp.float32)
 
     def leaf(g, mu, nu, p):
-        g = g.astype(jnp.float32)
         mu = b1 * mu + (1 - b1) * g
         nu = b2 * nu + (1 - b2) * g * g
         step = (mu / c1) / (jnp.sqrt(nu / c2) + eps) + wd * p

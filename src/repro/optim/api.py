@@ -1,5 +1,16 @@
-"""Optimizer factory: (init_fn, update_fn) pairs keyed by OptimizerConfig."""
+"""Optimizer factory: (init_fn, update_fn) pairs keyed by OptimizerConfig.
+
+Master-weight contract: parameters (and the optimizer state mirroring
+them) live in their master dtype — float32 unless a config says otherwise —
+while gradients may arrive in a reduced dtype from the precision pipeline
+(``PrecisionPolicy.grad_dtype`` casts them before the data-axis psum).
+``update_fn`` promotes every gradient leaf back to its parameter's master
+dtype here, once, so the sgd/lars/adamw update math always runs full
+precision and SWAP's phase-3 averaging only ever sees master weights.
+"""
 from __future__ import annotations
+
+import jax
 
 from repro.configs.base import OptimizerConfig
 from repro.optim import adamw, lars, sgd
@@ -15,6 +26,8 @@ def init_optimizer(cfg: OptimizerConfig):
         raise ValueError(f"unknown optimizer {cfg.kind!r}")
 
     def update_fn(grads, state, params, lr):
+        grads = jax.tree_util.tree_map(
+            lambda g, p: g.astype(p.dtype), grads, params)
         return mod.update(grads, state, params, lr, cfg)
 
     return mod.init, update_fn

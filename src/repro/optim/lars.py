@@ -18,10 +18,10 @@ def init(params):
 
 
 def update(grads, state, params, lr, cfg: OptimizerConfig):
+    """Gradients arrive pre-cast to the master param dtype (optim.api)."""
     m, wd, tc = cfg.momentum, cfg.weight_decay, cfg.trust_coefficient
 
     def leaf(g, buf, p):
-        g = g.astype(jnp.float32)
         d = g + wd * p
         if p.ndim > 1:
             p_norm = jnp.linalg.norm(p)

@@ -15,11 +15,11 @@ def init(params):
 
 def update(grads, state, params, lr, cfg: OptimizerConfig):
     """Returns (new_params, new_state). L2-style weight decay folded into the
-    gradient (the paper's setting), not AdamW-style decoupled decay."""
+    gradient (the paper's setting), not AdamW-style decoupled decay.
+    Gradients arrive pre-cast to the master param dtype (optim.api)."""
     m, wd = cfg.momentum, cfg.weight_decay
 
     def leaf(g, buf, p):
-        g = g.astype(jnp.float32)
         d = g + wd * p
         buf = m * buf + d
         step = d + m * buf if cfg.nesterov else buf

@@ -2,6 +2,11 @@ from repro.train.loop import (
     EpochRunner, PhaseResult, TrainState, init_train_state,
     python_loop_reference, run_phase, stack_train_state,
 )
+from repro.train.precision import (
+    BF16, F16, F32, LossScaleState, PrecisionPolicy, default_scale_state,
+    make_precision_train_step, resolve_policy, split_microbatches,
+    stack_scale_state,
+)
 from repro.train.steps import (
     lm_loss_and_metrics, make_decode_fn, make_lm_eval_fn, make_lm_train_step,
     make_prefill_fn,

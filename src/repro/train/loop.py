@@ -6,8 +6,13 @@ the hardware, set the step rate. This module replaces that with an
 epoch-granular runner:
 
   * ``TrainState`` — the single pytree that flows through every phase:
-    (bundle, opt_state, step, acc_ema, phase tag, rng). Phase 2 carries the
-    same structure with a leading W worker axis on every leaf.
+    (bundle, opt_state, step, acc_ema, phase tag, rng, loss-scale state).
+    Phase 2 carries the same structure with a leading W worker axis on
+    every leaf. Train steps have the precision-pipeline signature
+    ``(bundle, opt_state, batch, step, scale) -> (bundle, opt_state,
+    scale, metrics)`` (see ``repro.train.precision``); plain-f32 phases
+    thread the trivial scale state so the engine — and checkpoints — are
+    uniform across precision configurations.
   * ``EpochRunner`` — compiles ``lax.scan(train_step)`` over an epoch-sized
     chunk inside ONE jit (vmapped over the worker axis for phase 2). Each
     scanned step gathers its batch in-trace via ``Loader.batch_in_trace``,
@@ -35,6 +40,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import Loader
+from repro.train.precision import (
+    LossScaleState, default_scale_state, stack_scale_state,
+)
 
 # phase tags carried inside TrainState (checkpointable, trace-friendly)
 PHASE_TAGS = {"sgd": 0, "phase1": 1, "phase2": 2}
@@ -54,21 +62,25 @@ class TrainState(NamedTuple):
     acc_ema: Any       # float32 scalar — streaming train-accuracy EMA
     phase: Any         # int32 PHASE_TAGS value
     rng: Any           # PRNGKey (reserved for stochastic steps)
+    scale: Any         # LossScaleState (trivial for plain-f32 policies)
 
 
 def init_train_state(bundle, opt_state, *, step: int = 0,
                      acc_ema: float = 0.0, phase: str = "phase1",
-                     seed: int = 0) -> TrainState:
+                     seed: int = 0,
+                     scale: Optional[LossScaleState] = None) -> TrainState:
     return TrainState(
         bundle=bundle, opt_state=opt_state,
         step=jnp.asarray(step, jnp.int32),
         acc_ema=jnp.asarray(acc_ema, jnp.float32),
         phase=jnp.asarray(PHASE_TAGS.get(phase, 0), jnp.int32),
-        rng=jax.random.PRNGKey(seed))
+        rng=jax.random.PRNGKey(seed),
+        scale=scale if scale is not None else default_scale_state())
 
 
 def stack_train_state(stacked_bundle, stacked_opt_state, n_workers: int,
-                      seed: int = 0) -> TrainState:
+                      seed: int = 0,
+                      scale: Optional[LossScaleState] = None) -> TrainState:
     """Assemble the phase-2 start state from an already-stacked bundle
     (every worker begins from the common phase-1 model) and freshly
     initialized per-worker optimizer state, both with a leading W axis."""
@@ -77,7 +89,9 @@ def stack_train_state(stacked_bundle, stacked_opt_state, n_workers: int,
         step=jnp.zeros((n_workers,), jnp.int32),
         acc_ema=jnp.zeros((n_workers,), jnp.float32),
         phase=jnp.full((n_workers,), PHASE_TAGS["phase2"], jnp.int32),
-        rng=jax.random.split(jax.random.PRNGKey(seed), n_workers))
+        rng=jax.random.split(jax.random.PRNGKey(seed), n_workers),
+        scale=stack_scale_state(
+            scale if scale is not None else default_scale_state(), n_workers))
 
 
 class EpochRunner:
@@ -123,13 +137,17 @@ class EpochRunner:
         def run_chunk(state: TrainState, worker):
             def body(st, _):
                 batch = loader.batch_in_trace(st.step, worker)
-                bundle, opt, metrics = step_fn(
-                    st.bundle, st.opt_state, batch, st.step)
+                bundle, opt, scale, metrics = step_fn(
+                    st.bundle, st.opt_state, batch, st.step, st.scale)
                 ema = (beta * st.acc_ema
                        + (1.0 - beta) * metrics["accuracy"]
                        .astype(jnp.float32))
+                if "skipped" in metrics:
+                    # dynamic-loss-scale policies flag overflow steps; the
+                    # stopping EMA must not absorb their (unapplied) batch
+                    ema = jnp.where(metrics["skipped"] > 0, st.acc_ema, ema)
                 st = TrainState(bundle, opt, st.step + 1, ema,
-                                st.phase, st.rng)
+                                st.phase, st.rng, scale)
                 return st, dict(metrics, ema=ema)
 
             return jax.lax.scan(body, state, xs=None, length=n_steps,
@@ -246,20 +264,24 @@ def python_loop_reference(step_fn: Callable, loader: Loader,
     ``benchmarks/bench_train_loop.py``. Returns (state, per-step log dicts).
     """
     fn = jax.jit(step_fn, donate_argnums=(0, 1))
-    bundle, opt = state.bundle, state.opt_state
+    bundle, opt, scale = state.bundle, state.opt_state, state.scale
     start = int(np.asarray(state.step))
     ema = jnp.asarray(state.acc_ema)
     logs = []
     for s in range(start, start + n_steps):
         batch = loader.batch(s, worker=worker)
-        bundle, opt, metrics = fn(bundle, opt, batch, s)
-        ema = (ema_beta * ema
-               + (1.0 - ema_beta) * metrics["accuracy"].astype(jnp.float32))
+        bundle, opt, scale, metrics = fn(bundle, opt, batch, s, scale)
+        new_ema = (ema_beta * ema
+                   + (1.0 - ema_beta) * metrics["accuracy"]
+                   .astype(jnp.float32))
+        if "skipped" in metrics:
+            new_ema = jnp.where(metrics["skipped"] > 0, ema, new_ema)
+        ema = new_ema
         logs.append({"step": s, "accuracy": float(metrics["accuracy"]),
                      "ema": float(ema), "loss": float(metrics["loss"]),
                      "lr": float(metrics["lr"])})
     jax.block_until_ready(bundle)
     return state._replace(
-        bundle=bundle, opt_state=opt,
+        bundle=bundle, opt_state=opt, scale=scale,
         step=jnp.asarray(start + n_steps, jnp.int32),
         acc_ema=ema.astype(jnp.float32)), logs

@@ -6,7 +6,7 @@ both consume them.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +15,9 @@ from repro.configs.base import OptimizerConfig
 from repro.dist.sharding import logical_constraint
 from repro.models.model import Model
 from repro.optim.api import init_optimizer
+from repro.train.precision import (
+    PrecisionPolicy, make_precision_train_step, resolve_policy,
+)
 
 
 def lm_loss_and_metrics(model: Model, params, batch: Dict):
@@ -46,11 +49,38 @@ def lm_loss_and_metrics(model: Model, params, batch: Dict):
 
 
 def make_lm_train_step(model: Model, opt_cfg: OptimizerConfig,
-                       schedule_fn: Callable):
+                       schedule_fn: Callable,
+                       policy: Optional[PrecisionPolicy] = None,
+                       grad_accum_steps: int = 1):
     """Returns (opt_init, train_step). train_step: (params, opt_state,
-    batch, step) -> (params, opt_state, metrics)."""
+    batch, step) -> (params, opt_state, metrics).
+
+    The stateless params-level surface (dry-run AOT lowering, arch smoke
+    tests) over the same precision pipeline the adapters use: grads
+    unscaled + cast to ``policy.grad_dtype`` before the data-axis psum,
+    master f32 optimizer update, optional microbatch accumulation. The
+    caller's ``model`` fixes the compute dtype (``ModelConfig.dtype`` —
+    built with ``policy.compute_dtype`` for reduced-precision runs, as the
+    LM adapter does). The deprecated ``opt_cfg.grad_dtype`` is folded into
+    the resolved policy (``resolve_policy``). Dynamic loss scaling is
+    stateful and therefore engine-only: drive it through the adapters /
+    ``EpochRunner`` (``TrainState.scale``), not this signature."""
     opt_init, opt_update = init_optimizer(opt_cfg)
-    grad_dtype = jnp.dtype(opt_cfg.grad_dtype)
+    policy = policy if policy is not None \
+        else resolve_policy("float32", opt_cfg)
+    if policy.dynamic:
+        raise ValueError(
+            "dynamic loss scaling needs the stateful engine step — use "
+            "adapter.make_train_step / EpochRunner (TrainState.scale)")
+
+    def loss_with_aux(params, state, batch):
+        total, metrics = lm_loss_and_metrics(model, params, batch)
+        return total, (metrics, state)
+
+    step5 = make_precision_train_step(
+        loss_with_aux, opt_update, schedule_fn, policy=policy,
+        grad_accum_steps=grad_accum_steps, cast_inputs=False)
+    const_scale = policy.init_scale_state()
 
     def train_step(params, opt_state, batch, step):
         # pin every batch leaf to the data axis at the step boundary so the
@@ -58,20 +88,10 @@ def make_lm_train_step(model: Model, opt_cfg: OptimizerConfig,
         # the host fed differently-placed arrays; no-op without a mesh
         batch = {k: logical_constraint(v, ("batch",))
                  for k, v in batch.items()}
-
-        def loss_fn(p):
-            return lm_loss_and_metrics(model, p, batch)
-
-        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
-        if grad_dtype != jnp.float32:
-            # reduced-precision gradient all-reduce (beyond-paper knob):
-            # the data-axis psum happens on these casted leaves.
-            grads = jax.tree_util.tree_map(
-                lambda g: g.astype(grad_dtype), grads)
-        lr = schedule_fn(step)
-        new_params, new_opt = opt_update(grads, opt_state, params, lr)
-        metrics = dict(metrics, lr=lr)
-        return new_params, new_opt, metrics
+        bundle, new_opt, _, metrics = step5(
+            {"params": params, "state": {}}, opt_state, batch, step,
+            const_scale)
+        return bundle["params"], new_opt, metrics
 
     return opt_init, train_step
 

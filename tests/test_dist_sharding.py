@@ -11,12 +11,13 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import registry
 from repro.configs.base import OptimizerConfig, ScheduleConfig
 from repro.core.adapters import LMAdapter
-from repro.core.swap import _stack_bundles
 from repro.core.schedules import schedule_fn
+from repro.core.swap import _stack_bundles
 from repro.dist.sharding import (
     assert_no_cross_worker_collectives, ensemble_shardings, get_mesh,
     logical_constraint, param_spec, set_mesh,
 )
+from repro.train.precision import default_scale_state, stack_scale_state
 
 
 # ---------------------------------------------------------------------------
@@ -125,7 +126,7 @@ def _phase2_compiled(mesh):
     adapter = LMAdapter(cfg, OptimizerConfig(kind="sgd"))
     raw_step = adapter.make_train_step(schedule_fn(
         ScheduleConfig(kind="const")))
-    ens_step = jax.vmap(raw_step, in_axes=(0, 0, 0, None))
+    ens_step = jax.vmap(raw_step, in_axes=(0, 0, 0, None, 0))
 
     bundle = jax.eval_shape(adapter.init, jax.random.PRNGKey(0))
     stacked = jax.eval_shape(lambda b: _stack_bundles(b, W), bundle)
@@ -134,14 +135,17 @@ def _phase2_compiled(mesh):
         "tokens": jax.ShapeDtypeStruct((W, 4, 16), jnp.int32),
         "labels": jax.ShapeDtypeStruct((W, 4, 16), jnp.int32),
     }
+    scale = jax.eval_shape(
+        lambda: stack_scale_state(default_scale_state(), W))
 
     s_sh = ensemble_shardings(mesh, stacked)
     o_sh = ensemble_shardings(mesh, opt)
     b_sh = ensemble_shardings(mesh, batch)
-    fn = jax.jit(ens_step, in_shardings=(s_sh, o_sh, b_sh, None),
-                 out_shardings=(s_sh, o_sh, None))
+    sc_sh = ensemble_shardings(mesh, scale)
+    fn = jax.jit(ens_step, in_shardings=(s_sh, o_sh, b_sh, None, sc_sh),
+                 out_shardings=(s_sh, o_sh, sc_sh, None))
     step = jax.ShapeDtypeStruct((), jnp.int32)
-    return fn.lower(stacked, opt, batch, step).compile()
+    return fn.lower(stacked, opt, batch, step, scale).compile()
 
 
 def test_phase2_ensemble_step_has_no_cross_worker_collectives(worker_mesh):

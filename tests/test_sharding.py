@@ -7,7 +7,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import registry
 from repro.dist.sharding import (
     assert_no_cross_worker_collectives, batch_shardings, collective_bytes,
-    param_spec, param_shardings, parse_replica_groups,
+    param_shardings, param_spec, parse_replica_groups,
 )
 from repro.models.model import Model
 

@@ -12,8 +12,9 @@ from repro.core.adapters import LMAdapter
 from repro.core.averaging import StreamingAverage, average_list, average_stacked
 from repro.core.schedules import schedule_fn
 from repro.core.swap import SWAP, _stack_bundles
-from repro.train.loop import stack_host_batches
 from repro.data.pipeline import Loader, make_markov_lm
+from repro.train.loop import stack_host_batches
+from repro.train.precision import default_scale_state, stack_scale_state
 
 
 # ---------------------------------------------------------------------------
@@ -134,18 +135,22 @@ def test_ensemble_step_equals_independent_runs(lm_setup):
     # vmapped path
     stacked = _stack_bundles(bundle, W)
     opt_stacked = jax.vmap(adapter.init_opt)(stacked)
-    ens = jax.jit(jax.vmap(raw_step, in_axes=(0, 0, 0, None)))
+    sc_stacked = stack_scale_state(default_scale_state(), W)
+    ens = jax.jit(jax.vmap(raw_step, in_axes=(0, 0, 0, None, 0)))
     for step in range(3):
         batches = stack_host_batches(loader, step, W)
-        stacked, opt_stacked, _ = ens(stacked, opt_stacked, batches, step)
+        stacked, opt_stacked, sc_stacked, _ = ens(
+            stacked, opt_stacked, batches, step, sc_stacked)
 
     # sequential path
     step_fn = jax.jit(raw_step)
     for w in range(W):
         b = bundle
         o = adapter.init_opt(b)
+        sc = default_scale_state()
         for step in range(3):
-            b, o, _ = step_fn(b, o, loader.batch(step, worker=w), step)
+            b, o, sc, _ = step_fn(b, o, loader.batch(step, worker=w),
+                                  step, sc)
         got = jax.tree_util.tree_map(lambda a: np.asarray(a[w]),
                                      stacked["params"])
         for (p1, l1), (p2, l2) in zip(
