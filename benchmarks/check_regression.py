@@ -19,12 +19,21 @@ higher is better:
 Prints a trajectory table (baseline -> fresh, delta) and appends it as
 markdown to ``$GITHUB_STEP_SUMMARY`` when set.
 
+Two invocation modes:
+
+  # one explicit pair
   python benchmarks/check_regression.py \
       --baseline BENCH_precision.json --fresh /tmp/bench_precision.json
+
+  # glob discovery: every checked-in BENCH_*.json is a contract; each
+  # must have a fresh counterpart bench_*.json in --fresh-dir. A NEW
+  # benchmark is enforced the moment its baseline lands — no CI edits.
+  python benchmarks/check_regression.py --fresh-dir /tmp
 """
 from __future__ import annotations
 
 import argparse
+import glob as globlib
 import json
 import os
 import sys
@@ -83,33 +92,77 @@ def render(rows, title: str) -> str:
     return "\n".join(lines) + "\n"
 
 
+def fresh_name(baseline_path: str) -> str:
+    """BENCH_train_loop.json -> bench_train_loop.json (the name every
+    benchmark script writes with --out)."""
+    base = os.path.basename(baseline_path)
+    return base.replace("BENCH_", "bench_", 1)
+
+
+def discover_pairs(baseline_glob: str, fresh_dir: str):
+    """(baseline, fresh) pairs from the checked-in BENCH_*.json set. A
+    baseline without a fresh counterpart is reported as (baseline, None)
+    so a benchmark that silently stopped running fails the job."""
+    baselines = sorted(globlib.glob(baseline_glob))
+    if not baselines:
+        raise SystemExit(f"no baselines match {baseline_glob!r}")
+    return [(b, os.path.join(fresh_dir, fresh_name(b))) for b in baselines]
+
+
+def check_pair(baseline: str, fresh: str, tolerance: float):
+    """Returns (table-markdown, failures) for one baseline/fresh pair."""
+    if not os.path.exists(fresh):
+        return "", [f"{os.path.basename(baseline)}: fresh result "
+                    f"{fresh} missing — did CI run this benchmark?"]
+    rows, failures = check(load_tracked(baseline), load_tracked(fresh),
+                           tolerance)
+    table = render(rows, f"Perf trajectory: {os.path.basename(baseline)}")
+    return table, [f"{os.path.basename(baseline)}: {m}" for m in failures]
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", required=True,
-                    help="checked-in BENCH_*.json")
-    ap.add_argument("--fresh", required=True,
-                    help="result JSON from this run")
+    ap.add_argument("--baseline", help="checked-in BENCH_*.json "
+                    "(single-pair mode; requires --fresh)")
+    ap.add_argument("--fresh", help="result JSON from this run")
+    ap.add_argument("--baseline-glob", default="BENCH_*.json",
+                    help="glob of checked-in baselines (discovery mode)")
+    ap.add_argument("--fresh-dir",
+                    help="directory holding fresh bench_*.json results; "
+                         "enables discovery mode over --baseline-glob")
     ap.add_argument("--tolerance", type=float, default=0.2,
                     help="allowed fractional drop vs baseline for metrics "
                          "marked stable (default 0.2)")
     args = ap.parse_args()
 
-    rows, failures = check(load_tracked(args.baseline),
-                           load_tracked(args.fresh), args.tolerance)
-    table = render(rows, f"Perf trajectory: {os.path.basename(args.baseline)}")
-    print(table)
+    if bool(args.baseline) == bool(args.fresh_dir):
+        raise SystemExit("pass either --baseline/--fresh (one pair) or "
+                         "--fresh-dir (glob discovery), not both/neither")
+    if args.baseline:
+        if not args.fresh:
+            raise SystemExit("--baseline requires --fresh")
+        pairs = [(args.baseline, args.fresh)]
+    else:
+        pairs = discover_pairs(args.baseline_glob, args.fresh_dir)
 
-    summary = os.environ.get("GITHUB_STEP_SUMMARY")
-    if summary:
-        with open(summary, "a") as f:
-            f.write(table + "\n")
+    all_failures, n_checked = [], 0
+    for baseline, fresh in pairs:
+        table, failures = check_pair(baseline, fresh, args.tolerance)
+        all_failures.extend(failures)
+        if table:
+            n_checked += 1
+            print(table)
+            summary = os.environ.get("GITHUB_STEP_SUMMARY")
+            if summary:
+                with open(summary, "a") as f:
+                    f.write(table + "\n")
 
-    if failures:
-        for msg in failures:
+    if all_failures:
+        for msg in all_failures:
             print(f"REGRESSION: {msg}", file=sys.stderr)
         raise SystemExit(1)
-    print(f"{len(rows)} tracked metrics within bounds "
-          f"({os.path.basename(args.baseline)})")
+    print(f"{n_checked} baseline(s) checked, all tracked metrics within "
+          f"bounds")
 
 
 if __name__ == "__main__":

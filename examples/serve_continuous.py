@@ -1,7 +1,8 @@
 """Continuous-batching serving: requests of different lengths stream
 through a fixed slot pool sharing one decode program and one cache.
 
-  PYTHONPATH=src python examples/serve_continuous.py [--arch mamba2-2.7b]
+  PYTHONPATH=src python examples/serve_continuous.py [--arch mamba2-2.7b] \
+      [--engine {loop,compiled}]
 """
 import argparse
 import time
@@ -11,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.models.model import Model
-from repro.serve.engine import Request, ServingEngine
+from repro.serve import CompiledServingEngine, Request, ServingEngine
 
 
 def main():
@@ -20,13 +21,22 @@ def main():
                     choices=registry.ASSIGNED_ARCHS)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--engine", default="compiled",
+                    choices=["loop", "compiled"],
+                    help="compiled = fused K-token decode under one jit; "
+                         "loop = the per-step oracle engine")
     args = ap.parse_args()
 
     cfg = registry.get_smoke_config(args.arch)
     model = Model(cfg)
     key = jax.random.PRNGKey(0)
     params = model.init(key)
-    engine = ServingEngine(model, params, max_batch=args.slots, max_seq=96)
+    if args.engine == "compiled":
+        engine = CompiledServingEngine(model, params, max_batch=args.slots,
+                                       max_seq=96, decode_block=4)
+    else:
+        engine = ServingEngine(model, params, max_batch=args.slots,
+                               max_seq=96)
 
     reqs = []
     for i in range(args.requests):
@@ -39,8 +49,13 @@ def main():
     results = engine.run(reqs)
     dt = time.perf_counter() - t0
     total = sum(len(v) for v in results.values())
-    print(f"{args.arch}: {args.requests} requests through {args.slots} "
-          f"slots -> {total} tokens in {dt:.1f}s")
+    print(f"{args.arch} [{args.engine}]: {args.requests} requests through "
+          f"{args.slots} slots -> {total} tokens in {dt:.1f}s")
+    if args.engine == "compiled":
+        st = engine.stats
+        print(f"  {st['decode_calls']} fused decode calls, "
+              f"{st['decode_transfers']} bulk host transfers, "
+              f"{st['admissions']} admissions")
     for rid, toks in results.items():
         print(f"  req {rid} ({len(reqs[rid].prompt)}-token prompt): {toks}")
 

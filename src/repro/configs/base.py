@@ -104,10 +104,12 @@ class ModelConfig:
     dtype: str = "bfloat16"        # activation/compute dtype for lowering
     param_dtype: str = "float32"
 
-    # implementation switches (pallas kernels are the TPU path; "reference"
-    # is the blockwise pure-jnp path used for lowering and CPU execution)
-    attention_impl: str = "reference"   # "reference" | "pallas"
-    ssd_impl: str = "reference"         # "reference" | "pallas"
+    # implementation switches, resolved per backend by
+    # repro.kernels.dispatch: "auto" picks the compiled Pallas kernel on
+    # TPU and the blockwise pure-jnp reference elsewhere; "pallas" /
+    # "reference" / "naive" force a path (pallas off-TPU = interpreter).
+    attention_impl: str = "auto"   # "auto" | "reference" | "pallas" | "naive"
+    ssd_impl: str = "auto"         # "auto" | "reference" | "pallas" | "naive"
     attention_chunk: int = 512          # kv block for blockwise reference attn
     remat: bool = True                  # checkpoint each layer in train_step
     # remat policy: "full" recomputes everything; "dots" saves matmul

@@ -32,9 +32,13 @@ def average_list(params_list):
 
 
 class StreamingAverage:
-    """Numerically-stable running mean of parameter pytrees."""
+    """Numerically-stable running mean of parameter pytrees.
 
-    def __init__(self, impl: str = "reference"):
+    ``impl`` follows repro.kernels.dispatch: "auto" (default) resolves to
+    the fused swa_avg Pallas kernel on TPU and the jnp reference
+    elsewhere; "pallas" forces the kernel (interpreter off-TPU)."""
+
+    def __init__(self, impl: str = "auto"):
         self.impl = impl
         self.n = 0
         self.avg = None

@@ -3,6 +3,14 @@
 Each kernel package has:
   kernel.py  — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target,
                validated with interpret=True on CPU)
-  ops.py     — jit'd public wrapper; dispatches impl in {"reference","pallas"}
+  ops.py     — jit'd public wrapper; dispatches impl in
+               {"auto","reference","pallas","naive"}
   ref.py     — pure-jnp oracle (simplest correct implementation)
+
+``repro.kernels.dispatch`` owns the impl/interpret resolution: "auto"
+(the config default) runs the compiled kernel on TPU and the jnp
+reference elsewhere (the kernels are Mosaic-TPU programs), so
+``interpret=True`` is never a hardcoded hot-path default — it is the
+off-TPU fallback the resolver picks.
 """
+from repro.kernels import dispatch  # noqa: F401

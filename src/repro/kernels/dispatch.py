@@ -1,0 +1,73 @@
+"""Backend-aware kernel dispatch: one resolver for every Pallas op.
+
+Before this module, every kernel wrapper hardcoded ``interpret=True`` and
+every call site pinned ``impl="reference"`` — correct on the CPU CI host,
+but the serving/training hot paths would run interpreter-speed Pallas (or
+skip the kernels entirely) on real hardware. ``resolve`` centralizes the
+choice:
+
+  requested      backend    -> impl        interpret
+  -----------------------------------------------------
+  "auto"         tpu        -> "pallas"    False  (compiled kernel)
+  "auto"         gpu / cpu  -> "reference" —      (blockwise jnp path)
+  "pallas"       tpu        -> "pallas"    False
+  "pallas"       gpu / cpu  -> "pallas"    True   (interpreter; tests)
+  "reference"    any        -> "reference" —
+  "naive"        any        -> "naive"     —      (oracle; tests only)
+
+The repo's kernels are Mosaic-TPU Pallas (pltpu VMEM BlockSpecs/scratch),
+so only TPU gets the compiled path; on GPU "auto" stays on the jnp
+reference (which XLA fuses well) rather than attempting a TPU-only
+lowering. A Triton port would flip that policy here, in one place.
+
+Call sites (models/attention.py, models/mamba2.py, core/averaging.py) pass
+the *requested* impl straight from their config (default ``"auto"``); the
+three kernel ``ops.py`` wrappers resolve it here, so adding a backend or
+flipping the policy is a one-file change. ``interpret_default()`` is the
+same rule exposed for code that drives a kernel module directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+KERNEL_IMPLS = ("auto", "pallas", "reference", "naive")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelDispatch:
+    """A resolved kernel choice: concrete impl + Pallas interpret flag."""
+
+    impl: str           # "pallas" | "reference" | "naive"
+    interpret: bool     # only meaningful when impl == "pallas"
+    backend: str        # backend the decision was made for
+
+
+def current_backend() -> str:
+    """The XLA backend kernels will execute on ("cpu" | "gpu" | "tpu")."""
+    return jax.default_backend()
+
+
+def interpret_default(backend: Optional[str] = None) -> bool:
+    """Pallas interpret mode: compiled on TPU, interpreter elsewhere (the
+    kernels are Mosaic-TPU programs; CPU has no Pallas lowering and the
+    GPU/Triton path cannot lower pltpu memory spaces)."""
+    return (backend or current_backend()) != "tpu"
+
+
+def resolve(requested: str, backend: Optional[str] = None) -> KernelDispatch:
+    """Map a requested impl ("auto" | "pallas" | "reference" | "naive") to a
+    concrete ``KernelDispatch`` for ``backend`` (default: the live one)."""
+    backend = backend or current_backend()
+    if requested == "auto":
+        impl = "pallas" if backend == "tpu" else "reference"
+    elif requested in ("pallas", "reference", "naive"):
+        impl = requested
+    else:
+        raise ValueError(
+            f"unknown kernel impl {requested!r}; expected one of "
+            f"{KERNEL_IMPLS}")
+    return KernelDispatch(impl=impl, interpret=interpret_default(backend),
+                          backend=backend)

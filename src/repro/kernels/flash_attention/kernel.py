@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import dispatch
+
 NEG_INF = -1e30
 
 
@@ -107,7 +109,7 @@ def _layout(q, k, v, block_q, block_k, interpret):
 def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
                            scale: float | None = None, q_offset: int = 0,
                            block_q: int = 128, block_k: int = 128,
-                           interpret: bool = True):
+                           interpret: bool | None = None):
     """q: (B, Sq, H, D); k, v: (B, Skv, KVH, D). Returns (B, Sq, H, D)."""
     out, _ = flash_attention_pallas_fwd(
         q, k, v, causal=causal, window=window, scale=scale,
@@ -124,9 +126,12 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
 def flash_attention_pallas_fwd(q, k, v, *, causal: bool = True,
                                window: int = 0, scale: float | None = None,
                                q_offset: int = 0, block_q: int = 128,
-                               block_k: int = 128, interpret: bool = True):
+                               block_k: int = 128, interpret: bool | None = None):
     """Forward returning (out (B,Sq,H,D), lse (B,Sq,H) f32) for the
-    backward kernels."""
+    backward kernels. ``interpret=None`` resolves per backend (compiled on
+    TPU, interpreter elsewhere — repro.kernels.dispatch)."""
+    if interpret is None:
+        interpret = dispatch.interpret_default()
     B, Sq, H, D = q.shape
     _, Skv, KVH, _ = k.shape
     G = H // KVH
@@ -267,9 +272,11 @@ def _fa_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 def flash_attention_pallas_bwd(q, k, v, out, lse, do, *, causal: bool = True,
                                window: int = 0, scale: float | None = None,
                                q_offset: int = 0, block_q: int = 128,
-                               block_k: int = 128, interpret: bool = True):
+                               block_k: int = 128, interpret: bool | None = None):
     """Flash backward. Returns (dq, dk, dv) with the input shapes.
     GQA: dK/dV accumulate over each kv head's G query heads via the grid."""
+    if interpret is None:
+        interpret = dispatch.interpret_default()
     B, Sq, H, D = q.shape
     _, Skv, KVH, _ = k.shape
     G = H // KVH

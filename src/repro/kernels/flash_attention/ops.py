@@ -5,11 +5,15 @@ chunks, online softmax). This is the path used for lowering/dry-run and CPU
 execution — it has the same O(S) memory behaviour as the kernel, so compiled
 HLO bytes reflect the flash algorithm rather than a materialized QK^T.
 
-``impl="pallas"``: the Pallas TPU kernel (interpret=True off-TPU). Gradient
-support via custom_vjp: forward runs the kernel, backward recomputes with the
-differentiable blockwise reference (standard recompute-in-backward strategy).
+``impl="pallas"``: the Pallas TPU kernel (compiled on TPU, interpreter
+elsewhere — see repro.kernels.dispatch). Gradient support via custom_vjp: forward
+runs the kernel, backward recomputes with the differentiable blockwise
+reference (standard recompute-in-backward strategy).
 
 ``impl="naive"``: the oracle (tests only).
+
+``impl="auto"`` (the config default): backend-resolved — compiled Pallas
+on TPU, the blockwise reference elsewhere.
 """
 from __future__ import annotations
 
@@ -18,6 +22,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.flash_attention import ref as _ref
 from repro.kernels.flash_attention.kernel import (
     flash_attention_pallas, flash_attention_pallas_bwd,
@@ -84,25 +89,27 @@ def _blockwise_reference(q, k, v, *, causal, window, scale, q_offset, chunk):
 # JAX 0.4.37: custom_vjp has no nondiff_argnames; positional argnums (all
 # static/hashable: bools, ints, float-or-None) express the same thing. The
 # bwd signature already receives them first, per the argnums convention.
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def _pallas_attention(q, k, v, causal, window, scale, q_offset, chunk):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _pallas_attention(q, k, v, causal, window, scale, q_offset, chunk,
+                      interpret):
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
-                                  scale=scale, q_offset=q_offset)
+                                  scale=scale, q_offset=q_offset,
+                                  interpret=interpret)
 
 
-def _pallas_fwd(q, k, v, causal, window, scale, q_offset, chunk):
+def _pallas_fwd(q, k, v, causal, window, scale, q_offset, chunk, interpret):
     out, lse = flash_attention_pallas_fwd(
         q, k, v, causal=causal, window=window, scale=scale,
-        q_offset=q_offset)
+        q_offset=q_offset, interpret=interpret)
     return out, (q, k, v, out, lse)
 
 
-def _pallas_bwd(causal, window, scale, q_offset, chunk, res, g):
+def _pallas_bwd(causal, window, scale, q_offset, chunk, interpret, res, g):
     # true flash backward (Pallas dQ + dK/dV kernels, LSE from forward)
     q, k, v, out, lse = res
     return flash_attention_pallas_bwd(
         q, k, v, out, lse, g, causal=causal, window=window, scale=scale,
-        q_offset=q_offset)
+        q_offset=q_offset, interpret=interpret)
 
 
 _pallas_attention.defvjp(_pallas_fwd, _pallas_bwd)
@@ -110,16 +117,14 @@ _pallas_attention.defvjp(_pallas_fwd, _pallas_bwd)
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     scale: float | None = None, q_offset: int = 0,
-                    chunk: int = 512, impl: str = "reference"):
+                    chunk: int = 512, impl: str = "auto"):
     """GQA flash attention. q: (B,Sq,H,D); k,v: (B,Skv,KVH,D)."""
-    if impl == "naive":
+    d = dispatch.resolve(impl)
+    if d.impl == "naive":
         return _ref.attention_ref(q, k, v, causal=causal, window=window,
                                   scale=scale, q_offset=q_offset)
-    if impl == "pallas":
+    if d.impl == "pallas":
         return _pallas_attention(q, k, v, causal, window, scale, q_offset,
-                                 chunk)
-    if impl == "reference":
-        return _blockwise_reference(q, k, v, causal=causal, window=window,
-                                    scale=scale, q_offset=q_offset,
-                                    chunk=chunk)
-    raise ValueError(f"unknown attention impl {impl!r}")
+                                 chunk, d.interpret)
+    return _blockwise_reference(q, k, v, causal=causal, window=window,
+                                scale=scale, q_offset=q_offset, chunk=chunk)

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import dispatch
+
 
 def _ssd_chunk_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref,
                       y_ref, state_ref, cum_ref):
@@ -122,11 +124,13 @@ def _ssd_chunk_bwd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref,
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_chunk_pallas_bwd(x, dt, A, Bm, Cm, dy, dstates, dcum, *,
-                         chunk: int = 128, interpret: bool = True):
+                         chunk: int = 128, interpret: bool | None = None):
     """Backward of ssd_chunk_pallas. Cotangents: dy (B,S,H,P) for y_intra,
     dstates (B,nc,H,P,N) for chunk-local states, dcum (B,S,H) for cum.
     Returns (dx, ddt, dA, dBm, dCm) with grouped B/C gradients summed over
     the heads sharing each group."""
+    if interpret is None:
+        interpret = dispatch.interpret_default()
     Bsz, S, H, P = x.shape
     G, N = Bm.shape[2], Bm.shape[3]
     rep = H // G
@@ -188,10 +192,13 @@ def ssd_chunk_pallas_bwd(x, dt, A, Bm, Cm, dy, dstates, dcum, *,
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_chunk_pallas(x, dt, A, Bm, Cm, *, chunk: int = 128,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """Intra-chunk SSD. x: (B,S,H,P); dt: (B,S,H); A: (H,);
     Bm, Cm: (B,S,G,N) — returns (y_intra (B,S,H,P) f32,
-    states (B,nc,H,P,N) f32, cum (B,S,H) f32). S % chunk must be 0."""
+    states (B,nc,H,P,N) f32, cum (B,S,H) f32). S % chunk must be 0.
+    ``interpret=None`` resolves per backend (repro.kernels.dispatch)."""
+    if interpret is None:
+        interpret = dispatch.interpret_default()
     Bsz, S, H, P = x.shape
     G, N = Bm.shape[2], Bm.shape[3]
     rep = H // G

@@ -8,6 +8,9 @@ behaviour as the kernel path; used for lowering/dry-run and CPU training.
 correction in JAX. Backward recomputes via the reference (custom_vjp).
 
 ``impl="naive"``: the sequential-recurrence oracle (tests only).
+
+``impl="auto"`` (the config default): backend-resolved — compiled Pallas
+on TPU, the chunked reference elsewhere (repro.kernels.dispatch).
 """
 from __future__ import annotations
 
@@ -16,6 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.ssd import ref as _ref
 from repro.kernels.ssd.kernel import ssd_chunk_pallas, ssd_chunk_pallas_bwd
 
@@ -112,10 +116,11 @@ def _chunked_reference(x, dt, A, Bm, Cm, D, chunk, init_state):
     return y, final
 
 
-# JAX 0.4.37: custom_vjp has no nondiff_argnames; chunk (arg 7, a static
-# int) becomes a positional nondiff argnum — bwd already takes it first.
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7,))
-def _pallas_ssd(x, dt, A, Bm, Cm, D, init_state, chunk):
+# JAX 0.4.37: custom_vjp has no nondiff_argnames; chunk and interpret
+# (args 7/8, static) become positional nondiff argnums — bwd takes them
+# first.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
+def _pallas_ssd(x, dt, A, Bm, Cm, D, init_state, chunk, interpret):
     S = x.shape[1]
     c = min(chunk, S)
     pad = (-S) % c
@@ -124,7 +129,8 @@ def _pallas_ssd(x, dt, A, Bm, Cm, D, init_state, chunk):
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
         Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    y_intra, states, cum = ssd_chunk_pallas(x, dt, A, Bm, Cm, chunk=c)
+    y_intra, states, cum = ssd_chunk_pallas(x, dt, A, Bm, Cm, chunk=c,
+                                            interpret=interpret)
     y, final = _inter_chunk(y_intra, states, cum, x, dt, A, Cm, D, c,
                             init_state)
     if pad:
@@ -132,7 +138,7 @@ def _pallas_ssd(x, dt, A, Bm, Cm, D, init_state, chunk):
     return y, final
 
 
-def _pallas_fwd(x, dt, A, Bm, Cm, D, init_state, chunk):
+def _pallas_fwd(x, dt, A, Bm, Cm, D, init_state, chunk, interpret):
     S = x.shape[1]
     c = min(chunk, S)
     pad = (-S) % c
@@ -142,7 +148,8 @@ def _pallas_fwd(x, dt, A, Bm, Cm, D, init_state, chunk):
         dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         Bmp = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
         Cmp = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    y_intra, states, cum = ssd_chunk_pallas(xp, dtp, A, Bmp, Cmp, chunk=c)
+    y_intra, states, cum = ssd_chunk_pallas(xp, dtp, A, Bmp, Cmp, chunk=c,
+                                            interpret=interpret)
     y, final = _inter_chunk(y_intra, states, cum, xp, dtp, A, Cmp, D, c,
                             init_state)
     if pad:
@@ -151,7 +158,7 @@ def _pallas_fwd(x, dt, A, Bm, Cm, D, init_state, chunk):
                         states, cum, pad, c)
 
 
-def _pallas_bwd(chunk, res, g):
+def _pallas_bwd(chunk, interpret, res, g):
     """True kernel backward: jnp autodiff through the (cheap) inter-chunk
     combine, then the Pallas intra-chunk backward kernel for the O(L²)
     part — no full forward recompute."""
@@ -174,7 +181,8 @@ def _pallas_bwd(chunk, res, g):
         d_yi, d_st, d_cum, dx1, dCm1, dD, d_init = vjp((dy, dfinal))
 
     dx2, ddt, dA, dBm, dCm2 = ssd_chunk_pallas_bwd(
-        xp, dtp, A, Bmp, Cmp, d_yi, d_st, d_cum, chunk=c)
+        xp, dtp, A, Bmp, Cmp, d_yi, d_st, d_cum, chunk=c,
+        interpret=interpret)
     dx = dx1.astype(jnp.float32) + dx2
     dCm = dCm1.astype(jnp.float32) + dCm2
     if pad:
@@ -189,17 +197,17 @@ _pallas_ssd.defvjp(_pallas_fwd, _pallas_bwd)
 
 
 def ssd_scan(x, dt, A, Bm, Cm, D=None, *, init_state=None, chunk: int = 128,
-             impl: str = "reference"):
+             impl: str = "auto"):
     """Mamba-2 SSD scan. x: (B,S,H,P); dt: (B,S,H) post-softplus; A: (H,)
     negative; Bm, Cm: (B,S,G,N); D: (H,) or None.
     Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32)."""
-    if impl == "naive":
+    d = dispatch.resolve(impl)
+    if d.impl == "naive":
         return _ref.ssd_ref(x, dt, A, Bm, Cm, D, init_state)
-    if impl == "reference":
-        return _chunked_reference(x, dt, A, Bm, Cm, D, chunk, init_state)
-    if impl == "pallas":
-        return _pallas_ssd(x, dt, A, Bm, Cm, D, init_state, chunk)
-    raise ValueError(f"unknown ssd impl {impl!r}")
+    if d.impl == "pallas":
+        return _pallas_ssd(x, dt, A, Bm, Cm, D, init_state, chunk,
+                           d.interpret)
+    return _chunked_reference(x, dt, A, Bm, Cm, D, chunk, init_state)
 
 
 ssd_decode = _ref.ssd_decode_ref

@@ -15,21 +15,28 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import dispatch
+
 _LANES = 1024   # 8 * 128, one VREG row of lanes
 _SUBS = 8
 
 
 def _avg_kernel(n_ref, avg_ref, w_ref, o_ref):
     n = n_ref[0, 0]
-    inv = 1.0 / (n + 1.0)
     avg = avg_ref[...].astype(jnp.float32)
     w = w_ref[...].astype(jnp.float32)
-    o_ref[...] = (avg + (w - avg) * inv).astype(o_ref.dtype)
+    # divide, NOT multiply-by-reciprocal: elementwise ops then match the
+    # jnp reference exactly, so kernel and reference stay BITWISE equal
+    # (the op is HBM-bandwidth-bound; the VPU divide is free here)
+    o_ref[...] = (avg + (w - avg) / (n + 1.0)).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def running_average_pallas(avg, w, n, *, interpret: bool = True):
-    """avg, w: 1-D same-length arrays; n: scalar float count."""
+def running_average_pallas(avg, w, n, *, interpret: bool | None = None):
+    """avg, w: 1-D same-length arrays; n: scalar float count.
+    ``interpret=None`` resolves per backend (repro.kernels.dispatch)."""
+    if interpret is None:
+        interpret = dispatch.interpret_default()
     assert avg.ndim == 1 and avg.shape == w.shape
     size = avg.shape[0]
     tile = _SUBS * _LANES

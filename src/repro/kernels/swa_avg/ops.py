@@ -1,25 +1,31 @@
-"""Public streaming-average op, scalar-leaf and pytree forms."""
+"""Public streaming-average op, scalar-leaf and pytree forms.
+
+``impl="auto"`` (the default) resolves per backend via
+repro.kernels.dispatch: the fused Pallas kernel on TPU, the jnp
+reference elsewhere.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.swa_avg.kernel import running_average_pallas
 from repro.kernels.swa_avg.ref import running_average_ref
 
 
-def running_average(avg, w, n, *, impl: str = "reference"):
+def running_average(avg, w, n, *, impl: str = "auto"):
     """avg' = avg + (w - avg)/(n+1) for one array."""
-    if impl == "pallas":
+    d = dispatch.resolve(impl)
+    if d.impl == "pallas":
         flat = running_average_pallas(avg.reshape(-1), w.reshape(-1),
-                                      jnp.asarray(n, jnp.float32))
+                                      jnp.asarray(n, jnp.float32),
+                                      interpret=d.interpret)
         return flat.reshape(avg.shape)
-    if impl in ("reference", "naive"):
-        return running_average_ref(avg, w, n)
-    raise ValueError(f"unknown swa_avg impl {impl!r}")
+    return running_average_ref(avg, w, n)
 
 
-def running_average_tree(avg_tree, w_tree, n, *, impl: str = "reference"):
+def running_average_tree(avg_tree, w_tree, n, *, impl: str = "auto"):
     """Streaming average applied leaf-wise to parameter pytrees."""
     return jax.tree_util.tree_map(
         lambda a, w: running_average(a, w, n, impl=impl), avg_tree, w_tree)

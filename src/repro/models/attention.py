@@ -68,9 +68,12 @@ def _rope(cfg: ModelConfig, q, k, positions, kv_positions=None):
 
 
 def gqa_forward(params, x, cfg: ModelConfig, *, positions=None, window: int = 0,
-                causal: bool = True, cross_x=None, return_cache: bool = False):
+                causal: bool = True, cross_x=None, return_cache: bool = False,
+                length=None):
     """Train/prefill path. x: (B,S,d). cross_x: encoder output for cross-attn
-    (no rope, no mask). Returns out or (out, cache)."""
+    (no rope, no mask). Returns out or (out, cache). ``length``: optional
+    scalar count of REAL tokens when x is right-padded to a prefill bucket —
+    window caches then arrange slots by real positions (pad rows excluded)."""
     dtype = x.dtype
     kv_src = cross_x if cross_x is not None else x
     q, k, v = _qkv(params, x, kv_src, cfg, dtype)
@@ -84,7 +87,8 @@ def gqa_forward(params, x, cfg: ModelConfig, *, positions=None, window: int = 0,
     if not return_cache:
         return out
     if window > 0:
-        k, v = _window_slots(k, window), _window_slots(v, window)
+        k = _window_slots(k, window, length)
+        v = _window_slots(v, window, length)
     return out, _maybe_quant_cache(cfg, k, v)
 
 
@@ -120,11 +124,20 @@ def _cache_kv(cfg: ModelConfig, cache, dtype):
     return cache["k"], cache["v"]
 
 
-def _window_slots(kv, window: int):
+def _window_slots(kv, window: int, length=None):
     """Arrange the last `window` entries into circular slot order.
     kv: (B,S,KVH,Dh) -> (B,window,KVH,Dh) where slot i holds the latest
-    position p <= S-1 with p ≡ i (mod window), or zeros if none."""
+    position p <= S-1 with p ≡ i (mod window), or zeros if none.
+    ``length``: optional (traced) count of real tokens — rows past it are
+    prefill-bucket padding and must not land in any slot."""
     B, S, KVH, Dh = kv.shape
+    if length is not None:
+        # dynamic form of the same rule, p = latest real pos ≡ i (mod W)
+        i = jnp.arange(window)
+        p = (length - 1) - jnp.mod(length - 1 - i, window)
+        rows = jnp.take(kv, jnp.clip(p, 0, S - 1), axis=1)
+        return jnp.where((p >= 0)[None, :, None, None], rows,
+                         jnp.zeros_like(rows))
     if S <= window:
         return jnp.pad(kv, ((0, 0), (0, window - S), (0, 0), (0, 0)))
     last = kv[:, S - window:]                     # positions S-window .. S-1

@@ -70,8 +70,14 @@ def _causal_conv(xbc, w, b, dtype):
 
 
 def mamba_forward(params, u, cfg: ModelConfig, *, return_cache: bool = False,
-                  init_cache=None):
-    """u: (B,S,d). Returns out or (out, cache{conv, state})."""
+                  init_cache=None, length=None):
+    """u: (B,S,d). Returns out or (out, cache{conv, state}).
+
+    ``length``: optional scalar count of REAL tokens when u is right-padded
+    to a prefill bucket. Padding is made inert by zeroing dt past ``length``
+    (decay exp(0·A)=1, contribution dt·x·B=0, so the SSD final state is the
+    state after exactly ``length`` tokens), and the conv cache gathers the
+    last d_conv-1 REAL inputs instead of the padded tail."""
     s = cfg.ssm
     dtype = u.dtype
     B, S, d = u.shape
@@ -93,6 +99,8 @@ def mamba_forward(params, u, cfg: ModelConfig, *, return_cache: bool = False,
     Bm = conv[..., d_in:d_in + gn].reshape(B, S, s.n_groups, s.d_state)
     Cm = conv[..., d_in + gn:].reshape(B, S, s.n_groups, s.d_state)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    if length is not None:
+        dt = jnp.where(jnp.arange(S)[None, :, None] < length, dt, 0.0)
     A = -jnp.exp(params["A_log"])
 
     y, final_state = ssd_scan(
@@ -104,8 +112,15 @@ def mamba_forward(params, u, cfg: ModelConfig, *, return_cache: bool = False,
     out = mdot(y, params["out_proj"], dtype)
     if not return_cache:
         return out
-    conv_cache = xbc[:, -(s.d_conv - 1):] if S >= s.d_conv - 1 else jnp.pad(
-        xbc, ((0, 0), (s.d_conv - 1 - S, 0), (0, 0)))
+    K1 = s.d_conv - 1
+    if length is not None:
+        idx = length - K1 + jnp.arange(K1)
+        rows = jnp.take(xbc, jnp.clip(idx, 0, S - 1), axis=1)
+        conv_cache = jnp.where((idx >= 0)[None, :, None], rows,
+                               jnp.zeros_like(rows))
+    else:
+        conv_cache = xbc[:, -K1:] if S >= K1 else jnp.pad(
+            xbc, ((0, 0), (K1 - S, 0), (0, 0)))
     return out, {"conv": conv_cache, "state": final_state}
 
 

@@ -157,8 +157,9 @@ class Model:
     # ------------------------------------------------------------------
 
     def _block_full(self, p, h, kind: LayerKind, positions, mode: str,
-                    enc_out=None, init_cache=None):
-        """Returns (h, cache_or_None, aux_loss)."""
+                    enc_out=None, init_cache=None, length=None):
+        """Returns (h, cache_or_None, aux_loss). ``length``: real-token
+        count for right-padded prefill buckets (see Model.prefill)."""
         cfg = self.cfg
         # keep the residual stream batch-sharded at every block boundary so
         # GSPMD resolves weight matmuls by gathering weights, not by
@@ -171,7 +172,7 @@ class Model:
             x = apply_norm(p["ln1"], h, cfg.norm, cfg.norm_eps)
             if mode == "prefill":
                 y, mc = mamba2.mamba_forward(p["mamba"], x, cfg,
-                                             return_cache=True)
+                                             return_cache=True, length=length)
                 cache["m"] = mc
             else:
                 y = mamba2.mamba_forward(p["mamba"], x, cfg)
@@ -191,7 +192,7 @@ class Model:
             if mode == "prefill":
                 y, ac = attn.gqa_forward(
                     p["attn"], x, cfg, positions=pos, window=kind.window,
-                    causal=causal, return_cache=True)
+                    causal=causal, return_cache=True, length=length)
                 cache["a"] = ac
             else:
                 y = attn.gqa_forward(p["attn"], x, cfg, positions=pos,
@@ -356,8 +357,20 @@ class Model:
     # -------------------------- prefill ------------------------------
 
     def prefill(self, params, tokens, *, cache_len: Optional[int] = None,
-                positions=None, vision_embeds=None, frames=None):
-        """Returns (last-token logits (B, vocab), cache)."""
+                positions=None, vision_embeds=None, frames=None,
+                length=None):
+        """Returns (last-token logits (B, vocab), cache).
+
+        ``length``: optional scalar (may be traced) count of REAL tokens
+        when ``tokens`` is right-padded to a fixed prefill bucket — the
+        compiled serving engine pads prompts to a small set of lengths so
+        warmup compiles a fixed program set. With ``length`` set, the
+        returned logits are those of token ``length-1``, window caches
+        arrange slots by real positions, and SSM states are exactly the
+        state after ``length`` tokens (pad dt is zeroed). Full-length KV
+        rows past ``length`` hold pad garbage, which decode never attends:
+        each step writes position p before attending, and the attention
+        mask admits only rows <= p."""
         cfg = self.cfg
         B, S = tokens.shape
         cache_len = cache_len or S
@@ -390,11 +403,12 @@ class Model:
             if cfg.family == "hybrid":
                 h, sc, _ = self._block_full(params["shared"], h,
                                             LayerKind("attn"), positions,
-                                            "prefill", enc_out)
+                                            "prefill", enc_out, length=length)
                 caches["shared"] = pad_cache(sc, LayerKind("attn"))
             for i, kind in enumerate(self.unit_kinds):
                 h, c, _ = self._block_full(_tree_index(unit_p, i), h, kind,
-                                           positions, "prefill", enc_out)
+                                           positions, "prefill", enc_out,
+                                           length=length)
                 caches[str(i)] = pad_cache(c, kind)
             return h, caches
 
@@ -411,10 +425,15 @@ class Model:
             cache["units"] = unit_caches
         for i, kind in enumerate(self.tail_kinds):
             h, c, _ = self._block_full(_tree_index(params["tail"], i), h,
-                                       kind, positions, "prefill", enc_out)
+                                       kind, positions, "prefill", enc_out,
+                                       length=length)
             cache[f"t{i}"] = pad_cache(c, kind)
         h = apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
-        logits = self._head(params, h[:, -1:])[:, 0]
+        if length is None:
+            h_last = h[:, -1:]
+        else:
+            h_last = jax.lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
+        logits = self._head(params, h_last)[:, 0]
         return logits, cache
 
     # -------------------------- decode -------------------------------

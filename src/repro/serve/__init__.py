@@ -1,1 +1,6 @@
+from repro.serve.compiled import (CompiledServingEngine, DecodeState,
+                                  decode_state_shardings, default_buckets)
 from repro.serve.engine import Request, ServingEngine
+
+__all__ = ["CompiledServingEngine", "DecodeState", "Request",
+           "ServingEngine", "decode_state_shardings", "default_buckets"]

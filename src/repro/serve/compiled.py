@@ -1,0 +1,339 @@
+"""Compiled continuous-batching engine: the serving analogue of the PR-3
+scan-based training engine.
+
+The per-step python ``ServingEngine`` (repro.serve.engine — kept as the
+token-exact equivalence oracle and bench baseline) dispatches ONE jitted
+decode per Python iteration and then blocks on ``int(next_tok[slot])`` for
+every active slot — B×1 host syncs per generated token — and rebuilds the
+whole cache pytree on the host at every admission. This engine moves the
+hot loop under one compile:
+
+  * **Device-resident scheduler state.** Slot state (next tokens, write
+    positions, active flags, remaining-token budgets, per-slot EOS ids,
+    sampling rng) lives on device as a ``DecodeState`` pytree alongside
+    the cache. The host keeps only the request queue and a replay mirror.
+
+  * **Fused multi-token decode.** One jit runs a ``lax.scan`` of
+    ``decode_block`` (K) model steps: sampling (argmax or categorical),
+    EOS detection, per-slot stopping, position/budget bookkeeping, and
+    token buffering all happen on device. The host receives a single bulk
+    ``(max_batch, K)`` token block per call — zero per-token round-trips —
+    and replays the device's stop rule from that block alone.
+
+  * **Jitted bulk admission.** A prefilled batch=1 cache is scattered into
+    an engine slot with ``dynamic_update_slice`` over each leaf's batch
+    dim — the dim named by ``repro.dist.cache_batch_dim``, the same rule
+    ``cache_shardings`` uses to put that dim on the ``data`` mesh axis —
+    replacing the old host-side leaf-by-leaf pytree rebuild.
+
+  * **Bucketed prefill.** Prompts are right-padded to a small set of
+    bucket lengths (``Model.prefill(length=...)`` makes the padding exact:
+    same logits, window slots, and SSM states as the unpadded prompt), so
+    warmup compiles a fixed program set instead of one program per
+    distinct prompt length.
+
+Scheduling differs from the oracle — admissions only happen between
+K-token blocks, so a freed slot can idle for up to K-1 steps — but each
+request's TOKENS are exact: a slot's output depends only on its own cache
+rows, which admission re-prefills (asserted per-request against both the
+python engine and single-request generation in tests/test_serve_compiled).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import (batch_shardings, cache_batch_dim,
+                                 cache_shardings, path_str)
+from repro.models.model import Model
+from repro.serve.engine import Request
+
+
+class DecodeState(NamedTuple):
+    """Device-resident scheduler state (a pytree; one leaf set per slot)."""
+
+    cache: Any               # model KV/SSM cache, batch dim = slots
+    tokens: jnp.ndarray      # (B,) int32 — next input token per slot
+    positions: jnp.ndarray   # (B,) int32 — cache position `tokens` writes to
+    active: jnp.ndarray      # (B,) bool  — slot currently generating
+    remaining: jnp.ndarray   # (B,) int32 — decode steps left in the budget
+    eos: jnp.ndarray         # (B,) int32 — per-slot EOS id, -1 = none
+    rng: jnp.ndarray         # PRNG key for categorical sampling
+
+
+def decode_state_shardings(mesh, state: DecodeState) -> DecodeState:
+    """NamedSharding tree for a DecodeState: cache leaves by the
+    ``cache_batch_dim`` rule, per-slot vectors batch-sharded, rng
+    replicated — so a multi-host serving mesh places slots on ``data``."""
+    vec_sh = batch_shardings(
+        mesh, {"tokens": state.tokens, "positions": state.positions,
+               "active": state.active, "remaining": state.remaining,
+               "eos": state.eos})
+    return DecodeState(
+        cache=cache_shardings(mesh, state.cache),
+        rng=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        **vec_sh)
+
+
+def default_buckets(max_seq: int, lo: int = 16) -> Tuple[int, ...]:
+    """Doubling prompt-length buckets: lo, 2lo, ... capped at max_seq."""
+    buckets: List[int] = []
+    b = lo
+    while b < max_seq:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_seq)
+    return tuple(buckets)
+
+
+class CompiledServingEngine:
+    """Drop-in sibling of ``ServingEngine`` with a compiled hot loop.
+
+    Args beyond the oracle's: ``decode_block`` (K — model steps fused per
+    host call), ``prefill_buckets`` (padded prompt lengths; None = doubling
+    set from ``default_buckets``), ``sample`` ("greedy" | "categorical"),
+    ``temperature`` and ``rng`` for sampling.
+    """
+
+    def __init__(self, model: Model, params, *, max_batch: int = 4,
+                 max_seq: int = 256, decode_block: int = 8,
+                 prefill_buckets: Optional[Sequence[int]] = None,
+                 sample: str = "greedy", temperature: float = 1.0,
+                 rng=None):
+        if sample not in ("greedy", "categorical"):
+            raise ValueError(f"unknown sample mode {sample!r}")
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.decode_block = decode_block
+        self.sample = sample
+        self.temperature = temperature
+        self.buckets = tuple(sorted(prefill_buckets)) \
+            if prefill_buckets else default_buckets(max_seq)
+        self.state = self._empty_state(
+            rng if rng is not None else jax.random.PRNGKey(0))
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_len: List[int] = [0] * max_batch   # prompt len per slot
+        self.waiting: List[Request] = []
+        # instrumentation consumed by benchmarks/bench_serve.py: the
+        # zero-per-token-round-trip claim is `decode_transfers ==
+        # decode_calls` (one bulk block fetch per fused call)
+        self.stats: Dict[str, int] = {
+            "decode_calls": 0, "decode_transfers": 0, "decode_steps": 0,
+            "admissions": 0, "admit_transfers": 0, "prefill_compiles": 0,
+        }
+        self._prefill_fn = jax.jit(
+            lambda p, t, L: model.prefill(p, t, cache_len=max_seq, length=L))
+        self._admit_fn = jax.jit(self._admit_device, donate_argnums=(0,))
+        self._decode_fn = jax.jit(self._decode_k, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    # device programs
+    # ------------------------------------------------------------------
+
+    def _empty_state(self, rng) -> DecodeState:
+        B = self.max_batch
+        return DecodeState(
+            cache=self.model.empty_cache(B, self.max_seq),
+            tokens=jnp.zeros((B,), jnp.int32),
+            positions=jnp.zeros((B,), jnp.int32),
+            active=jnp.zeros((B,), bool),
+            remaining=jnp.zeros((B,), jnp.int32),
+            eos=jnp.full((B,), -1, jnp.int32),
+            rng=rng)
+
+    def _sample(self, logits, key):
+        """(B, vocab) logits -> (B,) int32 next tokens."""
+        if self.sample == "greedy":
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / self.temperature,
+            axis=-1).astype(jnp.int32)
+
+    def _admit_device(self, state: DecodeState, prefill_cache, first_tok,
+                      slot, length, budget, eos_id, active) -> DecodeState:
+        """Scatter a batch=1 prefill cache + fresh slot scalars into
+        ``slot``. One compiled program for every admission (prefill caches
+        are always padded to ``max_seq``)."""
+        def scatter(path, dst, src):
+            # the cache's batch-dim layout is owned by repro.dist — the
+            # same rule cache_shardings uses to put the batch dim on `data`
+            bd = cache_batch_dim(path_str(path))
+            start = [jnp.int32(0)] * dst.ndim
+            start[bd] = slot
+            return jax.lax.dynamic_update_slice(
+                dst, src.astype(dst.dtype), tuple(start))
+
+        cache = jax.tree_util.tree_map_with_path(
+            scatter, state.cache, prefill_cache)
+        return DecodeState(
+            cache=cache,
+            tokens=state.tokens.at[slot].set(first_tok),
+            positions=state.positions.at[slot].set(length),
+            active=state.active.at[slot].set(active),
+            remaining=state.remaining.at[slot].set(budget),
+            eos=state.eos.at[slot].set(eos_id),
+            rng=state.rng)
+
+    def _decode_k(self, params, state: DecodeState):
+        """K fused decode steps under one jit. Returns (state, (B, K) token
+        block) — the block is the ONLY device->host traffic per call."""
+        model, max_seq = self.model, self.max_seq
+
+        def body(st: DecodeState, _):
+            logits, cache = model.decode(params, st.cache,
+                                         st.tokens[:, None], st.positions)
+            rng, key = jax.random.split(st.rng)
+            next_tok = self._sample(logits, key)
+            act = st.active
+            # mirror the oracle's step: positions advance, budgets tick,
+            # and a slot stops on budget, EOS, or max_seq-1 truncation —
+            # all checked AFTER the position increment, like
+            # ServingEngine._maybe_finish. Finished/free slots freeze so
+            # their (garbage) rows never index out of bounds.
+            pos1 = jnp.where(act, st.positions + 1, st.positions)
+            rem1 = jnp.where(act, st.remaining - 1, st.remaining)
+            hit_eos = (st.eos >= 0) & (next_tok == st.eos)
+            done = (rem1 <= 0) | hit_eos | (pos1 >= max_seq - 1)
+            return DecodeState(
+                cache=cache,
+                tokens=jnp.where(act, next_tok, st.tokens),
+                positions=pos1,
+                active=act & ~done,
+                remaining=rem1,
+                eos=st.eos,
+                rng=rng), next_tok
+
+        state, toks = jax.lax.scan(body, state, None,
+                                   length=self.decode_block)
+        return state, toks.T                      # (K, B) -> (B, K)
+
+    # ------------------------------------------------------------------
+    # host scheduler
+    # ------------------------------------------------------------------
+
+    def _bucket(self, S: int) -> int:
+        for b in self.buckets:
+            if b >= S:
+                return b
+        return S              # buckets capped below max_seq: exact-length
+
+    def submit(self, request: Request) -> None:
+        S = request.prompt.shape[0]
+        if S > self.max_seq:
+            raise ValueError(
+                f"prompt of {S} tokens cannot fit the engine cache "
+                f"(max_seq={self.max_seq})")
+        self.waiting.append(request)
+        self._admit()
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self) -> None:
+        # re-derive free slots every iteration: a request that finishes AT
+        # admission (budget 1 / instant EOS / truncation) leaves its slot
+        # free for the next waiting request in this same pass
+        while self.waiting:
+            free = self._free_slots()
+            if not free:
+                return
+            slot = free[0]
+            req = self.waiting.pop(0)
+            S = req.prompt.shape[0]
+            bucket = self._bucket(S)
+            padded = jnp.pad(req.prompt[None, :].astype(jnp.int32),
+                             ((0, 0), (0, bucket - S)))
+            logits, pc = self._prefill_fn(self.params, padded,
+                                          jnp.int32(S))
+            if self.sample == "greedy":
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)[0]
+            else:
+                self.state, key = self._split_host_key()
+                tok = jax.random.categorical(
+                    key, logits.astype(jnp.float32)
+                    / self.temperature, axis=-1).astype(jnp.int32)[0]
+            t0 = int(tok)                         # one scalar per ADMISSION
+            self.stats["admissions"] += 1
+            self.stats["admit_transfers"] += 1
+            req.generated = [t0]
+            done0 = (req.max_new_tokens <= 1
+                     or (req.eos_id is not None and t0 == req.eos_id)
+                     or S >= self.max_seq - 1)
+            self.state = self._admit_fn(
+                self.state, pc, tok, jnp.int32(slot), jnp.int32(S),
+                jnp.int32(req.max_new_tokens - 1), jnp.int32(
+                    -1 if req.eos_id is None else req.eos_id),
+                jnp.asarray(not done0))
+            if done0:
+                req.done = True
+            else:
+                self.slot_req[slot] = req
+                self.slot_len[slot] = S
+
+    def _split_host_key(self):
+        rng, key = jax.random.split(self.state.rng)
+        return self.state._replace(rng=rng), key
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def step(self) -> None:
+        """One fused K-token decode call for all slots, then a single bulk
+        host transfer and a host-side replay of the device stop rule."""
+        if self.active == 0:
+            return
+        self.state, block = self._decode_fn(self.params, self.state)
+        self.stats["decode_calls"] += 1
+        self.stats["decode_steps"] += self.decode_block
+        block = np.asarray(block)                 # ONE (B, K) transfer
+        self.stats["decode_transfers"] += 1
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            for k in range(self.decode_block):
+                t = int(block[slot, k])
+                req.generated.append(t)
+                n = len(req.generated)
+                pos_after = self.slot_len[slot] + n - 1
+                if (n >= req.max_new_tokens
+                        or (req.eos_id is not None and t == req.eos_id)
+                        or pos_after >= self.max_seq - 1):
+                    req.done = True
+                    self.slot_req[slot] = None
+                    break
+        self._admit()
+
+    def run(self, requests: List[Request], max_steps: int = 10_000
+            ) -> Dict[int, List[int]]:
+        """Serve requests to completion; returns rid -> tokens."""
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while (self.active or self.waiting) and steps < max_steps:
+            self.step()
+            steps += 1
+        return {r.rid: r.generated for r in requests}
+
+    # ------------------------------------------------------------------
+
+    def warmup(self) -> None:
+        """Compile the fixed program set (one prefill per bucket, the
+        admission scatter, the fused decode block) before serving."""
+        dummy = jnp.zeros((1, self.buckets[0]), jnp.int32)
+        _, pc = self._prefill_fn(self.params, dummy, jnp.int32(1))
+        for b in self.buckets[1:]:
+            self._prefill_fn(self.params, jnp.zeros((1, b), jnp.int32),
+                             jnp.int32(1))
+        self.stats["prefill_compiles"] += len(self.buckets)
+        st = self._empty_state(jax.random.PRNGKey(0))
+        st = self._admit_fn(st, pc, jnp.int32(0), jnp.int32(0),
+                            jnp.int32(1), jnp.int32(0), jnp.int32(-1),
+                            jnp.asarray(False))
+        st, _ = self._decode_fn(self.params, st)
+        jax.block_until_ready(st.tokens)

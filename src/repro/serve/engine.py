@@ -12,6 +12,13 @@ Inactive slots decode garbage into their own slot region; their outputs are
 masked and their cache rows are re-prefilled on admission, so they cannot
 contaminate live requests (asserted in tests against single-request
 generation, token-exact).
+
+NOTE: this per-step engine is the EQUIVALENCE ORACLE and bench baseline
+for ``repro.serve.compiled.CompiledServingEngine`` (one fused K-token
+decode per host call, device-resident slot state, jitted admission).
+Production serving should use the compiled engine; this one dispatches one
+jitted step per Python iteration and blocks on a per-slot ``int()`` sync
+for every generated token.
 """
 from __future__ import annotations
 
@@ -56,6 +63,11 @@ class ServingEngine:
     # ------------------------------------------------------------------
 
     def submit(self, request: Request) -> None:
+        S = request.prompt.shape[0]
+        if S > self.max_seq:
+            raise ValueError(
+                f"prompt of {S} tokens cannot fit the engine cache "
+                f"(max_seq={self.max_seq})")
         self.waiting.append(request)
         self._admit()
 
@@ -63,9 +75,14 @@ class ServingEngine:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
     def _admit(self) -> None:
-        for slot in self._free_slots():
-            if not self.waiting:
+        # re-derive free slots every iteration: a request that finishes AT
+        # admission (via _maybe_finish below) leaves its slot free for the
+        # next waiting request in this same pass
+        while self.waiting:
+            free = self._free_slots()
+            if not free:
                 return
+            slot = free[0]
             req = self.waiting.pop(0)
             S = req.prompt.shape[0]
             logits, pc = self._prefill(self.params,

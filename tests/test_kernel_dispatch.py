@@ -1,0 +1,105 @@
+"""Backend-aware kernel dispatch: resolution table on the CPU CI backend,
+auto == reference on CPU, and forced-pallas StreamingAverage bitwise-equal
+to the reference on every leaf shape of a real model bundle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.averaging import StreamingAverage
+from repro.kernels import dispatch
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd.ops import ssd_scan
+from repro.models.model import Model
+
+
+def test_resolve_on_cpu_ci_backend():
+    """This suite runs on the XLA CPU backend: auto must pick the jnp
+    reference (never interpreter-Pallas in a hot path), and forcing
+    pallas must flip interpret mode on."""
+    assert dispatch.current_backend() == "cpu"
+    d = dispatch.resolve("auto")
+    assert d.impl == "reference" and d.backend == "cpu"
+    d = dispatch.resolve("pallas")
+    assert d.impl == "pallas" and d.interpret is True
+    assert dispatch.resolve("reference").impl == "reference"
+    assert dispatch.resolve("naive").impl == "naive"
+    assert dispatch.interpret_default() is True
+
+
+def test_resolve_on_accelerators():
+    """TPU compiles the Pallas kernels; GPU does NOT (they are Mosaic-TPU
+    programs — pltpu memory spaces have no Triton lowering), so auto on
+    gpu stays on the reference and forced pallas interprets. (Explicit
+    backend arg — no accelerator needed to check the table.)"""
+    for requested in ("auto", "pallas"):
+        d = dispatch.resolve(requested, backend="tpu")
+        assert d.impl == "pallas" and d.interpret is False, requested
+    assert dispatch.interpret_default("tpu") is False
+
+    d = dispatch.resolve("auto", backend="gpu")
+    assert d.impl == "reference"
+    d = dispatch.resolve("pallas", backend="gpu")
+    assert d.impl == "pallas" and d.interpret is True
+    assert dispatch.interpret_default("gpu") is True
+    assert dispatch.resolve("reference", backend="tpu").impl == "reference"
+
+
+def test_unknown_impl_raises():
+    with pytest.raises(ValueError, match="unknown kernel impl"):
+        dispatch.resolve("cuda")
+
+
+def test_auto_is_reference_on_cpu_for_ops():
+    """impl="auto" (the config default) must run the exact same path as
+    impl="reference" on CPU — bitwise, both ops."""
+    key = jax.random.PRNGKey(0)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (2, 16, 4, 8))
+               for i in range(3))
+    np.testing.assert_array_equal(
+        np.asarray(flash_attention(q, k, v, impl="auto", chunk=8)),
+        np.asarray(flash_attention(q, k, v, impl="reference", chunk=8)))
+
+    B, S, H, P, G, N = 2, 32, 4, 8, 2, 16
+    x = jax.random.normal(jax.random.fold_in(key, 3), (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 4),
+                                           (B, S, H)))
+    A = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 5), (H,)))
+    Bm = jax.random.normal(jax.random.fold_in(key, 6), (B, S, G, N))
+    Cm = jax.random.normal(jax.random.fold_in(key, 7), (B, S, G, N))
+    ya, sa = ssd_scan(x, dt, A, Bm, Cm, impl="auto", chunk=16)
+    yr, sr = ssd_scan(x, dt, A, Bm, Cm, impl="reference", chunk=16)
+    np.testing.assert_array_equal(np.asarray(ya), np.asarray(yr))
+    np.testing.assert_array_equal(np.asarray(sa), np.asarray(sr))
+
+
+def test_streaming_average_pallas_bitwise_on_real_bundle():
+    """Forcing impl="pallas" in StreamingAverage must stay BITWISE equal
+    to the reference on every leaf shape of a real model bundle — embed
+    tables, stacked block weights (3-D/4-D, non-tile-aligned), norm
+    scales. The swa_avg kernel divides (never multiplies by a
+    reciprocal) precisely so this holds."""
+    cfg = registry.get_smoke_config("internlm2-1.8b")
+    model = Model(cfg)
+    p1 = model.init(jax.random.PRNGKey(0))
+    p2 = model.init(jax.random.PRNGKey(1))
+    p3 = jax.tree_util.tree_map(lambda a: 0.5 * a, p1)
+
+    ref, pal = StreamingAverage(impl="reference"), StreamingAverage(
+        impl="pallas")
+    for p in (p1, p2, p3):
+        ref.add(p)
+        pal.add(p)
+    flat_r = jax.tree_util.tree_flatten_with_path(ref.value())[0]
+    flat_p = jax.tree_util.tree_flatten(pal.value())[0]
+    assert len(flat_r) == len(flat_p) > 5
+    for (path, leaf_r), leaf_p in zip(flat_r, flat_p):
+        np.testing.assert_array_equal(
+            np.asarray(leaf_r), np.asarray(leaf_p),
+            err_msg=f"leaf {jax.tree_util.keystr(path)} "
+                    f"shape {leaf_r.shape}")
+
+
+def test_streaming_average_default_is_auto():
+    assert StreamingAverage().impl == "auto"
