@@ -1,5 +1,6 @@
 from repro.checkpoint.io import load_pytree, save_pytree
 from repro.checkpoint.state import (
-    Checkpointer, find_resume_point, list_checkpoints, load_train_state,
+    Checkpointer, find_latest_publish, find_resume_point, list_checkpoints,
+    list_publishes, load_publish, load_train_state, save_publish,
     save_train_state, state_step,
 )

@@ -15,6 +15,15 @@ engine's ``TrainState`` (``repro.train.loop``):
     ``phase2`` (mid-phase-2 stacked state).
   * ``find_resume_point`` — newest usable snapshot in a directory, in
     resume-priority order phase2 > phase1_final > phase1.
+  * publish snapshots — ``save_publish`` / ``list_publishes`` /
+    ``find_latest_publish`` / ``load_publish``: the *publishable* averaged
+    parameter tree the live-serving path consumes
+    (``repro.serve.publish``). Publish files are plain param pytrees, NOT
+    TrainStates, and are deliberately invisible to ``list_checkpoints`` /
+    ``find_resume_point`` — a training resume must never restart from an
+    averaged model. They carry the same atomic-write guarantee
+    (sidecar-before-snapshot, write-then-rename), so a follower polling
+    the directory can never observe a torn generation.
 
 Restores are exact: the resumed run executes the same compiled epoch chunks
 on bit-identical state, so its parameters and metric logs match an
@@ -37,6 +46,9 @@ from repro.train.loop import TrainState
 _FILE_RE = re.compile(r"^(phase1_final|phase1|phase2)-step(\d+)\.msgpack$")
 # resume priority: a phase2 snapshot supersedes phase1_final supersedes phase1
 _TAG_ORDER = {"phase1": 0, "phase1_final": 1, "phase2": 2}
+# publishable averaged-params snapshots (NOT resume points — excluded from
+# _FILE_RE above so list_checkpoints/find_resume_point never see them)
+_PUBLISH_RE = re.compile(r"^publish-gen(\d+)-step(\d+)\.msgpack$")
 
 
 def _state_tree(state: TrainState) -> Dict[str, Any]:
@@ -106,6 +118,58 @@ def find_resume_point(directory: str) -> Optional[Dict[str, Any]]:
     if not ckpts:
         return None
     return max(ckpts, key=lambda c: (_TAG_ORDER[c["tag"]], c["step"]))
+
+
+def publish_path(directory: str, generation: int, step: int) -> str:
+    return os.path.join(
+        directory, f"publish-gen{generation:08d}-step{step:08d}.msgpack")
+
+
+def save_publish(directory: str, generation: int, step: int, params,
+                 meta: Optional[Dict[str, Any]] = None) -> str:
+    """Atomically write a publishable averaged-params snapshot.
+
+    Same kill-anywhere contract as ``save_train_state``: the sidecar goes
+    first, then the snapshot, each via write-then-rename — the ``.msgpack``
+    is what ``find_latest_publish`` keys off, so a crash between the two
+    writes leaves at worst a stray sidecar, never a loadable torn
+    generation."""
+    os.makedirs(directory, exist_ok=True)
+    path = publish_path(directory, generation, step)
+    atomic_write(path + ".json",
+                 json.dumps(dict(meta or {}, generation=generation,
+                                 step=step), indent=1).encode())
+    save_pytree(path, params)
+    return path
+
+
+def list_publishes(directory: str) -> List[Dict[str, Any]]:
+    """Complete publish snapshots in ``directory`` as
+    {path, generation, step, meta}, ordered by generation."""
+    if not directory or not os.path.isdir(directory):
+        return []
+    out = []
+    for name in sorted(os.listdir(directory)):
+        m = _PUBLISH_RE.match(name)
+        if not m:
+            continue
+        path = os.path.join(directory, name)
+        out.append({"path": path, "generation": int(m.group(1)),
+                    "step": int(m.group(2)), "meta": read_meta(path)})
+    return sorted(out, key=lambda p: p["generation"])
+
+
+def find_latest_publish(directory: str) -> Optional[Dict[str, Any]]:
+    """Newest complete publish snapshot, or None. Atomic renames guarantee
+    any listed ``.msgpack`` is complete, so the newest is always safe to
+    load — a publisher killed mid-write is simply not visible yet."""
+    pubs = list_publishes(directory)
+    return pubs[-1] if pubs else None
+
+
+def load_publish(path: str, template) -> Any:
+    """Restore a published parameter tree into ``template``'s structure."""
+    return load_pytree(path, template)
 
 
 class Checkpointer:

@@ -50,7 +50,13 @@ class StreamingAverage:
             self.avg = jax.tree_util.tree_map(
                 lambda a: jnp.array(a, jnp.float32, copy=True), params)
         else:
-            self.avg = running_average_tree(self.avg, params, float(self.n),
+            # cast to the accumulator dtype BEFORE folding: the first model
+            # is accumulated in f32, so later bf16/f16 trees must enter the
+            # fold as f32 too — otherwise the kernel and reference paths
+            # see different operand dtypes and can disagree
+            w = jax.tree_util.tree_map(
+                lambda a, acc: jnp.asarray(a, acc.dtype), params, self.avg)
+            self.avg = running_average_tree(self.avg, w, float(self.n),
                                             impl=self.impl)
         self.n += 1
         return self.avg
@@ -61,20 +67,35 @@ class StreamingAverage:
         return self.avg
 
 
+def _batch_count(batch) -> int:
+    """Number of samples in a batch: the leading dim of its first array
+    leaf (scalar leaves like ``aug_seed`` carry no sample count)."""
+    for leaf in jax.tree_util.tree_leaves(batch):
+        if getattr(leaf, "ndim", 0) >= 1:
+            return int(leaf.shape[0])
+    raise ValueError("cannot infer batch size: batch has no array leaves")
+
+
 def recompute_bn_stats(batch_stats_fn: Callable, params,
                        batches: Iterable) -> dict:
     """One pass over training data producing fresh BN running statistics for
     averaged weights. ``batch_stats_fn(params, batch) -> {layer: {mean,var}}``.
-    Aggregates by simple averaging over batches (paper: 'computing new
-    batch-normalization statistics ... through one pass over the data')."""
-    acc, n = None, 0
+    Aggregates by batch-size-WEIGHTED averaging (paper: 'computing new
+    batch-normalization statistics ... through one pass over the data') —
+    an unweighted mean would overweight a short final batch's statistics.
+    Raises ValueError on an empty iterable: silently returning no state
+    would serve a BN model with stale (pre-average) statistics."""
+    acc, total = None, 0
     for batch in batches:
         stats = batch_stats_fn(params, batch)
-        if acc is None:
-            acc = jax.tree_util.tree_map(lambda x: x, stats)
-        else:
-            acc = jax.tree_util.tree_map(jnp.add, acc, stats)
-        n += 1
+        bs = _batch_count(batch)
+        weighted = jax.tree_util.tree_map(
+            lambda x: x * jnp.float32(bs), stats)
+        acc = weighted if acc is None \
+            else jax.tree_util.tree_map(jnp.add, acc, weighted)
+        total += bs
     if acc is None:
-        return {}
-    return jax.tree_util.tree_map(lambda x: x / n, acc)
+        raise ValueError(
+            "recompute_bn_stats received no batches — BN statistics need at "
+            "least one pass batch (was the loader empty?)")
+    return jax.tree_util.tree_map(lambda x: x / total, acc)

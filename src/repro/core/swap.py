@@ -25,7 +25,7 @@ mid-phase-1 or mid-phase-2 (see ``repro.checkpoint.state``).
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -141,7 +141,13 @@ class SWAP:
                                  scale=policy.init_scale_state())
 
     def run(self, key, collect_curves: bool = False,
-            resume: bool = False) -> Dict:
+            resume: bool = False, phase2_hooks: Sequence = ()) -> Dict:
+        """``phase2_hooks``: extra epoch-boundary hooks for phase 2, each
+        called as ``hook(state, steps_done)`` after every compiled chunk
+        (the ``run_phase`` hook surface) — e.g.
+        ``repro.serve.publish.WeightPublisher.on_epoch``, which folds the
+        across-worker mean into a running average and hot-swaps it into
+        live serving engines. Hooks run before curve collection."""
         cfg = self.cfg
         adapter = self.adapter
         results: Dict = {"phase1_log": [], "phase2_curves": []}
@@ -230,7 +236,7 @@ class SWAP:
         # curve point and the final phase-3 finalize
         bn_loader = Loader(self.train_arrays, cfg.bn_recompute_batch_size,
                            seed=cfg.seed)
-        curve_hook = None
+        hooks = list(phase2_hooks)
         if collect_curves:
             def curve_hook(state: TrainState, done: int):
                 avg_now = adapter.finalize(
@@ -247,13 +253,15 @@ class SWAP:
                     "avg_test_acc": adapter.eval_accuracy(
                         avg_now, self.test_loader, max_batches=2)})
 
+            hooks.append(curve_hook)
+
         res2 = run_phase(runner2, state2, workers,
                          max_steps=cfg.phase2.max_steps - state_step(state2),
                          chunk_steps=1 if collect_curves else None,
                          checkpointer=ckpt, tag="phase2",
                          checkpoint_meta=lambda tt: {
                              "phase2_train_time": prior_t2 + tt},
-                         on_chunk=curve_hook)
+                         on_chunk=hooks)
         state2 = res2.state
         results["phase2_steps"] = state_step(state2)
         # train time only (cumulative across resumes) — curve eval /

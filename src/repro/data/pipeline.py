@@ -19,6 +19,7 @@ Tasks:
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict
 
 import jax
@@ -112,6 +113,18 @@ class Loader:
         self.batch_size = batch_size
         self.seed = seed
         self.steps_per_epoch = self.n // batch_size
+        # epoch walks cover steps_per_epoch * batch_size samples; the
+        # remainder never enters ANY epoch (every permutation is truncated
+        # at the same offset). Surface it instead of dropping silently —
+        # BN-recompute passes and eval loops must know their coverage.
+        self.dropped_per_epoch = self.n % batch_size
+        if self.dropped_per_epoch:
+            warnings.warn(
+                f"Loader drops {self.dropped_per_epoch} of {self.n} samples "
+                f"every epoch ({batch_size=} does not divide the dataset); "
+                f"each epoch covers only steps_per_epoch*batch_size = "
+                f"{self.steps_per_epoch * batch_size} samples",
+                stacklevel=2)
 
     def _perm(self, worker, epoch):
         key = jax.random.fold_in(

@@ -14,6 +14,19 @@ Two decode engines:
 Throughput is reported for prefill and decode SEPARATELY (prompt tok/s vs
 generated tok/s) plus an overall rate that includes prefill cost — the old
 single ``tokens_per_s`` silently excluded prefill from throughput claims.
+
+Live-following mode — the consumer half of the continuous train→serve
+loop (``repro.serve.publish``):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+      --follow ckpts/ [--follow-timeout 10]
+
+tails ``ckpts/`` for atomic publish snapshots written by a
+``WeightPublisher`` (e.g. a training run with live publishing enabled),
+hot-swaps each new weight generation into a running
+``CompiledServingEngine`` without dropping in-flight requests, and serves
+a continuous synthetic request stream until no new generation appears for
+``--follow-timeout`` seconds.
 """
 from __future__ import annotations
 
@@ -110,6 +123,77 @@ def generate(model: Model, params, prompts, new_tokens: int,
     }
 
 
+def follow(model: Model, cfg, params, args) -> dict:
+    """Serve a continuous synthetic request stream while tailing
+    ``args.follow`` for publish snapshots; hot-swap each new weight
+    generation into the live engine without dropping in-flight requests.
+
+    Exits after ``--follow-timeout`` seconds with no new generation (the
+    deadline resets on every pickup). Returns a per-generation report.
+    """
+    from repro.serve.compiled import CompiledServingEngine
+    from repro.serve.engine import Request
+    from repro.serve.publish import PublishFollower
+
+    max_seq = args.prompt_len + args.new_tokens + 8
+    engine = CompiledServingEngine(
+        model, params, max_batch=args.batch, max_seq=max_seq,
+        decode_block=args.decode_block, prefill_buckets=[args.prompt_len])
+    follower = PublishFollower(args.follow, template=params)
+    upd = follower.poll()
+    if upd is not None:                       # seed from the newest publish
+        gen, new = upd
+        engine.publish(new, generation=gen)
+        print(f"seeded from publish generation {gen}")
+    engine.warmup(dual=True)                  # compile both decode programs
+
+    key = jax.random.PRNGKey(args.seed + 1)
+    rid = 0
+    requests: list = []
+
+    def _feed():
+        """Keep every slot busy so swaps land on a loaded engine."""
+        nonlocal rid
+        while len(engine.waiting) + engine.active < args.batch:
+            prompt = jax.random.randint(
+                jax.random.fold_in(key, rid), (args.prompt_len,), 0,
+                cfg.vocab_size, dtype=jnp.int32)
+            req = Request(rid=rid, prompt=prompt,
+                          max_new_tokens=args.new_tokens)
+            requests.append(req)
+            engine.submit(req)
+            rid += 1
+
+    pickups = 0
+    deadline = time.time() + args.follow_timeout
+    while time.time() < deadline:
+        upd = follower.poll()
+        if upd is not None:
+            gen, new = upd
+            engine.publish(new, generation=gen)
+            applied = "applied" if engine.generation == gen else "deferred"
+            print(f"picked up generation {gen} ({applied}); "
+                  f"{engine.active} requests in flight")
+            pickups += 1
+            deadline = time.time() + args.follow_timeout
+        _feed()
+        engine.step()
+    while engine.active or engine.waiting:    # finish what was admitted
+        engine.step()
+
+    per_gen: dict = {}
+    for req in requests:
+        if req.done:
+            e = per_gen.setdefault(req.generation, {"requests": 0,
+                                                    "tokens": 0})
+            e["requests"] += 1
+            e["tokens"] += len(req.generated)
+    st = engine.stats
+    assert st["decode_transfers"] == st["decode_calls"], \
+        "publish broke the single-transfer-per-decode-call invariant"
+    return {"pickups": pickups, "per_generation": per_gen, "stats": st}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b",
@@ -126,6 +210,15 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kv-int8", action="store_true",
                     help="int8-quantized KV cache (halves cache memory)")
+    ap.add_argument("--follow", default="",
+                    help="live-follow a publish directory: hot-swap new "
+                         "weight generations into a running engine while "
+                         "serving (see repro.serve.publish)")
+    ap.add_argument("--follow-timeout", type=float, default=10.0,
+                    help="exit --follow mode after this many seconds "
+                         "without a new generation")
+    ap.add_argument("--decode-block", type=int, default=4,
+                    help="fused decode steps per host call in --follow")
     args = ap.parse_args()
 
     cfg = (registry.get_config(args.arch) if args.full
@@ -139,6 +232,20 @@ def main():
     if args.ckpt:
         params = load_pytree(args.ckpt, params)
         print(f"restored {args.ckpt}")
+
+    if args.follow:
+        report = follow(model, cfg, params, args)
+        print(f"follow mode done: {report['pickups']} generation pickups")
+        for gen in sorted(report["per_generation"]):
+            e = report["per_generation"][gen]
+            print(f"  generation {gen}: {e['requests']} requests, "
+                  f"{e['tokens']} tokens")
+        st = report["stats"]
+        print(f"decode_calls={st['decode_calls']} "
+              f"decode_transfers={st['decode_transfers']} "
+              f"publish_swaps={st['publish_swaps']} "
+              f"dual_decode_calls={st['dual_decode_calls']}")
+        return
 
     B = args.batch
     prompts = jax.random.randint(key, (B, args.prompt_len), 0,

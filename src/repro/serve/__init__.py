@@ -1,6 +1,8 @@
 from repro.serve.compiled import (CompiledServingEngine, DecodeState,
                                   decode_state_shardings, default_buckets)
 from repro.serve.engine import Request, ServingEngine
+from repro.serve.publish import PublishFollower, WeightPublisher
 
-__all__ = ["CompiledServingEngine", "DecodeState", "Request",
-           "ServingEngine", "decode_state_shardings", "default_buckets"]
+__all__ = ["CompiledServingEngine", "DecodeState", "PublishFollower",
+           "Request", "ServingEngine", "WeightPublisher",
+           "decode_state_shardings", "default_buckets"]

@@ -37,6 +37,17 @@ K-token blocks, so a freed slot can idle for up to K-1 steps — but each
 request's TOKENS are exact: a slot's output depends only on its own cache
 rows, which admission re-prefills (asserted per-request against both the
 python engine and single-request generation in tests/test_serve_compiled).
+
+  * **Live weight publishing.** ``publish(params)`` hot-swaps a new weight
+    generation (e.g. the phase-2 running average from
+    ``repro.serve.publish.WeightPublisher``) without dropping in-flight
+    requests: params are double-buffered on device, every slot is pinned
+    to the generation it was admitted under, and while two generations are
+    live the fused loop evaluates both and selects per-slot (bitwise — a
+    swap never perturbs an admitted request's tokens). New admissions pick
+    up the latest generation; the swap itself is pure host bookkeeping +
+    one async host->device params transfer, so ``decode_transfers ==
+    decode_calls`` holds across swaps (tests/test_publish.py).
 """
 from __future__ import annotations
 
@@ -102,34 +113,58 @@ class CompiledServingEngine:
                  max_seq: int = 256, decode_block: int = 8,
                  prefill_buckets: Optional[Sequence[int]] = None,
                  sample: str = "greedy", temperature: float = 1.0,
-                 rng=None):
+                 rng=None, generation: int = 0):
         if sample not in ("greedy", "categorical"):
             raise ValueError(f"unknown sample mode {sample!r}")
         self.model = model
-        self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.decode_block = decode_block
         self.sample = sample
         self.temperature = temperature
+        # double-buffered device-resident param sets: slot j of _buffers
+        # holds weight generation _buf_gen[j]; _latest names the buffer new
+        # admissions pin to. publish() fills the inactive buffer, so an
+        # in-flight request keeps decoding on the exact weights it was
+        # admitted under (see _decode_k_dual).
+        self._buffers: List[Any] = [params, None]
+        self._buf_gen: List[int] = [generation, generation - 1]
+        self._latest: int = 0
+        self._pending: Optional[Tuple[int, Any]] = None
         self.buckets = tuple(sorted(prefill_buckets)) \
             if prefill_buckets else default_buckets(max_seq)
         self.state = self._empty_state(
             rng if rng is not None else jax.random.PRNGKey(0))
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_len: List[int] = [0] * max_batch   # prompt len per slot
+        self.slot_buf: List[int] = [0] * max_batch   # pinned param buffer
         self.waiting: List[Request] = []
-        # instrumentation consumed by benchmarks/bench_serve.py: the
-        # zero-per-token-round-trip claim is `decode_transfers ==
-        # decode_calls` (one bulk block fetch per fused call)
+        # instrumentation consumed by benchmarks/bench_serve.py and
+        # bench_publish.py: the zero-per-token-round-trip claim is
+        # `decode_transfers == decode_calls` (one bulk block fetch per
+        # fused call) — publishes must not add host syncs
         self.stats: Dict[str, int] = {
             "decode_calls": 0, "decode_transfers": 0, "decode_steps": 0,
             "admissions": 0, "admit_transfers": 0, "prefill_compiles": 0,
+            "publishes": 0, "publish_swaps": 0, "publish_superseded": 0,
+            "dual_decode_calls": 0,
         }
         self._prefill_fn = jax.jit(
             lambda p, t, L: model.prefill(p, t, cache_len=max_seq, length=L))
         self._admit_fn = jax.jit(self._admit_device, donate_argnums=(0,))
         self._decode_fn = jax.jit(self._decode_k, donate_argnums=(1,))
+        self._decode_dual_fn = jax.jit(self._decode_k_dual,
+                                       donate_argnums=(2,))
+
+    @property
+    def params(self):
+        """The latest published parameter set (what new admissions use)."""
+        return self._buffers[self._latest]
+
+    @property
+    def generation(self) -> int:
+        """Weight generation new admissions are pinned to."""
+        return self._buf_gen[self._latest]
 
     # ------------------------------------------------------------------
     # device programs
@@ -179,38 +214,79 @@ class CompiledServingEngine:
             eos=state.eos.at[slot].set(eos_id),
             rng=state.rng)
 
+    def _advance(self, st: DecodeState, logits, cache):
+        """Shared per-step bookkeeping after the model evaluation(s):
+        sample, then mirror the oracle's step — positions advance, budgets
+        tick, and a slot stops on budget, EOS, or max_seq-1 truncation,
+        all checked AFTER the position increment, like
+        ServingEngine._maybe_finish. Finished/free slots freeze so their
+        (garbage) rows never index out of bounds. Identical ops in the
+        single- and dual-generation programs, so tokens are bitwise
+        independent of which program decoded them."""
+        max_seq = self.max_seq
+        rng, key = jax.random.split(st.rng)
+        next_tok = self._sample(logits, key)
+        act = st.active
+        pos1 = jnp.where(act, st.positions + 1, st.positions)
+        rem1 = jnp.where(act, st.remaining - 1, st.remaining)
+        hit_eos = (st.eos >= 0) & (next_tok == st.eos)
+        done = (rem1 <= 0) | hit_eos | (pos1 >= max_seq - 1)
+        return DecodeState(
+            cache=cache,
+            tokens=jnp.where(act, next_tok, st.tokens),
+            positions=pos1,
+            active=act & ~done,
+            remaining=rem1,
+            eos=st.eos,
+            rng=rng), next_tok
+
     def _decode_k(self, params, state: DecodeState):
         """K fused decode steps under one jit. Returns (state, (B, K) token
         block) — the block is the ONLY device->host traffic per call."""
-        model, max_seq = self.model, self.max_seq
+        model = self.model
 
         def body(st: DecodeState, _):
             logits, cache = model.decode(params, st.cache,
                                          st.tokens[:, None], st.positions)
-            rng, key = jax.random.split(st.rng)
-            next_tok = self._sample(logits, key)
-            act = st.active
-            # mirror the oracle's step: positions advance, budgets tick,
-            # and a slot stops on budget, EOS, or max_seq-1 truncation —
-            # all checked AFTER the position increment, like
-            # ServingEngine._maybe_finish. Finished/free slots freeze so
-            # their (garbage) rows never index out of bounds.
-            pos1 = jnp.where(act, st.positions + 1, st.positions)
-            rem1 = jnp.where(act, st.remaining - 1, st.remaining)
-            hit_eos = (st.eos >= 0) & (next_tok == st.eos)
-            done = (rem1 <= 0) | hit_eos | (pos1 >= max_seq - 1)
-            return DecodeState(
-                cache=cache,
-                tokens=jnp.where(act, next_tok, st.tokens),
-                positions=pos1,
-                active=act & ~done,
-                remaining=rem1,
-                eos=st.eos,
-                rng=rng), next_tok
+            return self._advance(st, logits, cache)
 
         state, toks = jax.lax.scan(body, state, None,
                                    length=self.decode_block)
         return state, toks.T                      # (K, B) -> (B, K)
+
+    def _decode_k_dual(self, params_a, params_b, state: DecodeState, use_b):
+        """K fused decode steps with TWO weight generations resident:
+        every slot's logits and cache rows come from the param set its
+        request was admitted under — ``jnp.where`` SELECTS between the two
+        evaluations (never blends), so an in-flight request's tokens are
+        bitwise identical to a single-generation engine pinned at its
+        admission weights. Costs two model evaluations per step; the host
+        dispatches this program only while generations are actually mixed
+        (the old one drains as its requests finish). Still one bulk (B, K)
+        transfer per call — publishing adds no host syncs."""
+        model = self.model
+
+        def body(st: DecodeState, _):
+            logits_a, cache_a = model.decode(params_a, st.cache,
+                                             st.tokens[:, None], st.positions)
+            logits_b, cache_b = model.decode(params_b, st.cache,
+                                             st.tokens[:, None], st.positions)
+            logits = jnp.where(use_b[:, None], logits_b, logits_a)
+
+            def pick(path, a, b):
+                # broadcast the per-slot selector along each cache leaf's
+                # batch dim — the dim owned by the repro.dist rule
+                bd = cache_batch_dim(path_str(path))
+                shape = [1] * a.ndim
+                shape[bd] = a.shape[bd]
+                return jnp.where(use_b.reshape(shape), b, a)
+
+            cache = jax.tree_util.tree_map_with_path(pick, cache_a, cache_b)
+            return self._advance(st, logits, cache)
+
+        state, toks = jax.lax.scan(body, state, None,
+                                   length=self.decode_block)
+        return state, toks.T
 
     # ------------------------------------------------------------------
     # host scheduler
@@ -237,8 +313,12 @@ class CompiledServingEngine:
     def _admit(self) -> None:
         # re-derive free slots every iteration: a request that finishes AT
         # admission (budget 1 / instant EOS / truncation) leaves its slot
-        # free for the next waiting request in this same pass
+        # free for the next waiting request in this same pass; a deferred
+        # publish is retried each iteration too, so a request admitted
+        # after the blocking slot freed picks up the newest generation
+        self._apply_pending()
         while self.waiting:
+            self._apply_pending()
             free = self._free_slots()
             if not free:
                 return
@@ -261,6 +341,7 @@ class CompiledServingEngine:
             self.stats["admissions"] += 1
             self.stats["admit_transfers"] += 1
             req.generated = [t0]
+            req.generation = self.generation      # pinned for its lifetime
             done0 = (req.max_new_tokens <= 1
                      or (req.eos_id is not None and t0 == req.eos_id)
                      or S >= self.max_seq - 1)
@@ -274,10 +355,73 @@ class CompiledServingEngine:
             else:
                 self.slot_req[slot] = req
                 self.slot_len[slot] = S
+                self.slot_buf[slot] = self._latest
 
     def _split_host_key(self):
         rng, key = jax.random.split(self.state.rng)
         return self.state._replace(rng=rng), key
+
+    # ------------------------------------------------------------------
+    # live weight publishing
+    # ------------------------------------------------------------------
+
+    def publish(self, params, generation: Optional[int] = None) -> bool:
+        """Queue ``params`` as the next weight generation and swap it in as
+        soon as the inactive buffer is free of pinned in-flight requests
+        (often immediately). In-flight requests keep decoding on their
+        admission-time weights; new admissions pick up the new generation.
+
+        Only the newest queued publish survives — if another lands before
+        a deferred one applied, the older is superseded (counted in
+        ``stats['publish_superseded']``). Returns True when the swap
+        happened inside this call, False when deferred (it will apply
+        between decode calls once the old generation drains) or stale
+        (``generation`` not newer than what the engine already serves).
+        """
+        base = self._buf_gen[self._latest]
+        if self._pending is not None:
+            base = max(base, self._pending[0])     # don't collide with a
+        gen = base + 1 if generation is None else int(generation)  # queued gen
+        if gen <= self._buf_gen[self._latest]:
+            return False                          # stale republish
+        if self._pending is not None:
+            if gen <= self._pending[0]:
+                return False
+            self.stats["publish_superseded"] += 1
+        self.stats["publishes"] += 1
+        self._pending = (gen, params)
+        return self._apply_pending()
+
+    def _apply_pending(self) -> bool:
+        """Swap the pending params into the inactive buffer unless a live
+        request still pins it (double-buffering invariant: a buffer is
+        only overwritten once no in-flight request can read it)."""
+        if self._pending is None:
+            return False
+        target = 1 - self._latest
+        if any(r is not None and self.slot_buf[i] == target
+               for i, r in enumerate(self.slot_req)):
+            return False                          # deferred: buffer busy
+        gen, params = self._pending
+        ref = self._buffers[self._latest]
+
+        def place(new, old):
+            new = jnp.asarray(new, getattr(old, "dtype", None))
+            if new.shape != old.shape:
+                raise ValueError(
+                    f"published params have leaf shape {new.shape} where "
+                    f"the engine expects {old.shape} — generation "
+                    f"published from a different model config?")
+            return new
+
+        # cast to the resident dtypes/shapes so the compiled decode
+        # programs are reused as-is (a publish must never recompile)
+        self._buffers[target] = jax.tree_util.tree_map(place, params, ref)
+        self._buf_gen[target] = gen
+        self._latest = target
+        self._pending = None
+        self.stats["publish_swaps"] += 1
+        return True
 
     @property
     def active(self) -> int:
@@ -285,10 +429,25 @@ class CompiledServingEngine:
 
     def step(self) -> None:
         """One fused K-token decode call for all slots, then a single bulk
-        host transfer and a host-side replay of the device stop rule."""
+        host transfer and a host-side replay of the device stop rule.
+
+        The host knows which param buffer every active slot is pinned to
+        (its replay mirror), so choosing the single- vs dual-generation
+        program needs no device sync: the common case (all slots on one
+        generation) runs exactly the pre-publishing program."""
         if self.active == 0:
             return
-        self.state, block = self._decode_fn(self.params, self.state)
+        bufs = {self.slot_buf[i] for i, r in enumerate(self.slot_req)
+                if r is not None}
+        if len(bufs) == 1:
+            self.state, block = self._decode_fn(
+                self._buffers[bufs.pop()], self.state)
+        else:
+            use_b = jnp.asarray(
+                [b == 1 for b in self.slot_buf])       # async, tiny, h->d
+            self.state, block = self._decode_dual_fn(
+                self._buffers[0], self._buffers[1], self.state, use_b)
+            self.stats["dual_decode_calls"] += 1
         self.stats["decode_calls"] += 1
         self.stats["decode_steps"] += self.decode_block
         block = np.asarray(block)                 # ONE (B, K) transfer
@@ -322,9 +481,12 @@ class CompiledServingEngine:
 
     # ------------------------------------------------------------------
 
-    def warmup(self) -> None:
+    def warmup(self, dual: bool = False) -> None:
         """Compile the fixed program set (one prefill per bucket, the
-        admission scatter, the fused decode block) before serving."""
+        admission scatter, the fused decode block) before serving.
+        ``dual=True`` additionally compiles the two-generation decode
+        program, so the first mid-flight publish pays no compile — pass it
+        when the engine will receive live weight swaps."""
         dummy = jnp.zeros((1, self.buckets[0]), jnp.int32)
         _, pc = self._prefill_fn(self.params, dummy, jnp.int32(1))
         for b in self.buckets[1:]:
@@ -336,4 +498,9 @@ class CompiledServingEngine:
                             jnp.int32(1), jnp.int32(0), jnp.int32(-1),
                             jnp.asarray(False))
         st, _ = self._decode_fn(self.params, st)
+        if dual:
+            other = self._buffers[1 - self._latest]
+            st, _ = self._decode_dual_fn(
+                self.params, other if other is not None else self.params,
+                st, jnp.zeros((self.max_batch,), bool))
         jax.block_until_ready(st.tokens)

@@ -41,6 +41,10 @@ class Request:
     # filled by the engine
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # weight generation the request was admitted under (compiled engine
+    # with live publishing; None on the per-step oracle, which serves one
+    # static param set)
+    generation: Optional[int] = None
 
 
 class ServingEngine:

@@ -179,6 +179,19 @@ def _ema_value(state: TrainState) -> float:
     return float(ema if ema.ndim == 0 else ema.min())
 
 
+def as_hooks(on_chunk) -> tuple:
+    """Normalize ``run_phase``'s ``on_chunk`` argument — None, a single
+    callable, or a sequence of callables — into a tuple. The epoch-boundary
+    hook surface: every hook is called as ``hook(state, steps_done)`` after
+    each compiled chunk, in order (curve eval, live weight publishing via
+    ``repro.serve.publish.WeightPublisher.on_epoch``, ...)."""
+    if on_chunk is None:
+        return ()
+    if callable(on_chunk):
+        return (on_chunk,)
+    return tuple(on_chunk)
+
+
 def _append_log(log: List[dict], metrics: Dict, first_step: int) -> None:
     host = {k: np.asarray(v) for k, v in metrics.items()
             if k in ("accuracy", "ema", "loss", "lr")}
@@ -201,9 +214,10 @@ def run_phase(runner: EpochRunner, state: TrainState, worker, *,
     early-exit on the accuracy EMA at epoch boundaries.
 
     ``max_steps`` counts from the CURRENT ``state.step`` (so a resumed state
-    runs only the remainder). ``on_chunk(state, steps_done)`` and
-    checkpointing run between chunks; their time is returned separately in
-    ``hook_time`` so eval never pollutes the train-rate measurement.
+    runs only the remainder). ``on_chunk`` — one callable or a sequence of
+    them, each ``hook(state, steps_done)`` — and checkpointing run between
+    chunks; their time is returned separately in ``hook_time`` so
+    eval/publishing never pollutes the train-rate measurement.
     ``checkpoint_meta(train_time_so_far) -> dict`` attaches caller metadata
     (e.g. cumulative phase wall/train time, so a later resume can report
     totals instead of remainder-only figures) to each snapshot.
@@ -213,6 +227,7 @@ def run_phase(runner: EpochRunner, state: TrainState, worker, *,
             "per-step logs are single-model only: ensemble metrics carry a "
             "leading worker axis — consume them via on_chunk instead")
     chunk = chunk_steps or runner.loader.steps_per_epoch
+    hooks = as_hooks(on_chunk)
     done, train_time, hook_time = 0, 0.0, 0.0
     # entry check, not just post-chunk: a restored state that already meets
     # the threshold (killed between its last snapshot and the phase-final
@@ -231,8 +246,8 @@ def run_phase(runner: EpochRunner, state: TrainState, worker, *,
         if log is not None:
             first = int(np.asarray(state.step).reshape(-1)[0]) - n
             _append_log(log, metrics, first)
-        if on_chunk is not None:
-            on_chunk(state, done)
+        for hook in hooks:
+            hook(state, done)
         if checkpointer is not None:
             checkpointer.maybe_save(
                 tag, state,

@@ -60,3 +60,75 @@ def test_save_is_atomic_no_tmp_left_behind(tmp_path):
     assert sorted(os.listdir(tmp_path)) == ["ckpt.msgpack"]
     out = load_pytree(p, {"a": jnp.ones(3)})
     np.testing.assert_array_equal(np.asarray(out["a"]), np.zeros(3))
+
+
+# ---------------------------------------------------------------------------
+# publish snapshots (the live-serving path: repro.serve.publish)
+# ---------------------------------------------------------------------------
+
+def test_publish_crash_between_sidecar_and_snapshot(tmp_path, monkeypatch):
+    """Kill the publisher between the sidecar write and the snapshot write:
+    the torn generation must be invisible to every consumer — a follower
+    keeps serving the previous complete generation."""
+    import repro.checkpoint.state as cs
+    from repro.serve.publish import PublishFollower
+
+    d = str(tmp_path)
+    tpl = {"a": jnp.ones((3,), jnp.float32)}
+    cs.save_publish(d, 1, 10, tpl)                       # complete gen 1
+
+    def boom(path, tree):
+        raise RuntimeError("killed mid-publish")
+    monkeypatch.setattr(cs, "save_pytree", boom)
+    with pytest.raises(RuntimeError):
+        cs.save_publish(d, 2, 20, {"a": jnp.zeros((3,), jnp.float32)})
+    monkeypatch.undo()
+
+    import os
+    names = sorted(os.listdir(d))
+    assert "publish-gen00000002-step00000020.msgpack.json" in names, \
+        "the crash should have happened AFTER the sidecar write"
+    assert "publish-gen00000002-step00000020.msgpack" not in names
+    # gen 2's stray sidecar is invisible: every consumer sees only gen 1
+    assert [p["generation"] for p in cs.list_publishes(d)] == [1]
+    assert cs.find_latest_publish(d)["generation"] == 1
+    follower = PublishFollower(d, template=tpl)
+    gen, params = follower.poll()
+    assert gen == 1
+    np.testing.assert_array_equal(np.asarray(params["a"]), np.ones(3))
+    assert follower.poll() is None
+    # a completed retry of the publish becomes visible atomically
+    cs.save_publish(d, 2, 20, {"a": jnp.zeros((3,), jnp.float32)})
+    gen, params = follower.poll()
+    assert gen == 2
+    np.testing.assert_array_equal(np.asarray(params["a"]), np.zeros(3))
+
+
+def test_publish_tmp_debris_never_visible(tmp_path):
+    """A stray .tmp from a kill inside atomic_write's write step must not
+    surface through the publish listing."""
+    from repro.checkpoint.state import (find_latest_publish, list_publishes,
+                                        publish_path, save_publish)
+    d = str(tmp_path)
+    save_publish(d, 3, 30, {"a": jnp.ones(2)})
+    debris = publish_path(d, 4, 40) + ".tmp"
+    with open(debris, "wb") as f:
+        f.write(b"partial bytes")
+    assert [p["generation"] for p in list_publishes(d)] == [3]
+    assert find_latest_publish(d)["generation"] == 3
+
+
+def test_find_resume_point_ignores_publish_snapshots(tmp_path):
+    """A training resume must NEVER restart from an averaged publish —
+    publish files are invisible to list_checkpoints/find_resume_point even
+    when they are the newest files in the directory."""
+    from repro.checkpoint.io import save_pytree as sp
+    from repro.checkpoint.state import (find_resume_point, list_checkpoints,
+                                        save_publish)
+    d = str(tmp_path)
+    save_publish(d, 9, 900, {"a": jnp.ones(2)})
+    assert find_resume_point(d) is None                  # publish-only dir
+    sp(str(tmp_path / "phase1-step00000040.msgpack"), {"a": jnp.ones(2)})
+    rp = find_resume_point(d)
+    assert rp is not None and rp["tag"] == "phase1" and rp["step"] == 40
+    assert all(c["tag"] != "publish" for c in list_checkpoints(d))

@@ -65,14 +65,43 @@ class TestLoader:
         e1 = np.asarray(loader.batch(loader.steps_per_epoch, worker=0)["y"])
         assert not np.array_equal(e0, e1)
 
+    def test_tail_drop_warns_once_and_is_queryable(self):
+        """Regression: a batch size that does not divide the dataset used
+        to silently shrink every epoch. Construction must warn (once, with
+        the dropped count) and expose ``dropped_per_epoch``."""
+        import warnings
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            loader = self._loader(n=70, bs=16)
+        assert loader.dropped_per_epoch == 70 % 16 == 6
+        msgs = [str(w.message) for w in caught
+                if "drops" in str(w.message)]
+        assert len(msgs) == 1
+        assert "6 of 70" in msgs[0]
+        # the epoch itself still covers exactly the kept samples, once each
+        seen = []
+        for step in range(loader.steps_per_epoch):
+            seen.extend(np.asarray(loader.batch(step)["y"]).tolist())
+        assert len(seen) == len(set(seen)) == 64
+
+    def test_no_tail_no_warning(self):
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")     # any warning -> test failure
+            loader = self._loader(n=64, bs=16)
+        assert loader.dropped_per_epoch == 0
+
     @settings(max_examples=20, deadline=None)
     @given(n=st.integers(8, 200), bs=st.integers(1, 8), w=st.integers(0, 5),
            epoch=st.integers(0, 3))
     def test_property_every_epoch_is_a_permutation(self, n, bs, w, epoch):
         """For any (size, batch, worker, epoch): batches within an epoch
         never repeat a sample and each item appears at most once."""
+        import warnings
         arrays = {"y": np.arange(n)}
-        loader = Loader(arrays, bs, seed=1)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")    # tail-drop warning expected
+            loader = Loader(arrays, bs, seed=1)
         spe = loader.steps_per_epoch
         seen = []
         for s in range(spe):

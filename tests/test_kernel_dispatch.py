@@ -103,3 +103,30 @@ def test_streaming_average_pallas_bitwise_on_real_bundle():
 
 def test_streaming_average_default_is_auto():
     assert StreamingAverage().impl == "auto"
+
+
+@pytest.mark.parametrize("impl", ["reference", "pallas"])
+def test_streaming_average_bf16_folds_match_f32(impl):
+    """Regression: folding bf16 param trees into the f32 accumulator must
+    cast BEFORE the running-average op on both impls — the result equals
+    averaging the f32 upcasts exactly, and the accumulator stays f32.
+    (Previously the mixed-dtype fold hit whatever promotion the chosen
+    kernel applied, so reference and pallas could disagree.)"""
+    cfg = registry.get_smoke_config("internlm2-1.8b")
+    model = Model(cfg)
+    trees = [jax.tree_util.tree_map(
+        lambda a: jnp.asarray(a, jnp.bfloat16),
+        model.init(jax.random.PRNGKey(i))) for i in range(3)]
+    as_f32 = [jax.tree_util.tree_map(
+        lambda a: jnp.asarray(a, jnp.float32), t) for t in trees]
+
+    mixed = StreamingAverage(impl=impl)
+    plain = StreamingAverage(impl=impl)
+    for bf, f32 in zip(trees, as_f32):
+        mixed.add(bf)                    # bf16 folds into f32 accumulator
+        plain.add(f32)                   # (first fold seeds it as f32)
+    for leaf_m, leaf_p in zip(jax.tree_util.tree_leaves(mixed.value()),
+                              jax.tree_util.tree_leaves(plain.value())):
+        assert leaf_m.dtype == jnp.float32
+        np.testing.assert_array_equal(np.asarray(leaf_m),
+                                      np.asarray(leaf_p))

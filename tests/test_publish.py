@@ -1,0 +1,227 @@
+"""Live weight publishing: token-exactness under mid-decode hot swaps
+(per-slot generation pinning across attention-KV, SSM, and sliding-window
+caches), deferred-publish drain semantics, the WeightPublisher epoch hook
+folding into a StreamingAverage, and PublishFollower poll semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.state import (find_latest_publish, list_publishes,
+                                    load_publish)
+from repro.configs import registry
+from repro.core.averaging import average_stacked
+from repro.launch.serve import generate
+from repro.models.model import Model
+from repro.serve.compiled import CompiledServingEngine
+from repro.serve.engine import Request
+from repro.serve.publish import PublishFollower, WeightPublisher
+from repro.train.loop import init_train_state
+
+_SETUP_CACHE = {}
+
+
+def _setup(arch):
+    if arch not in _SETUP_CACHE:
+        cfg = registry.get_smoke_config(arch)
+        model = Model(cfg)
+        p0 = model.init(jax.random.PRNGKey(0))
+        p1 = model.init(jax.random.PRNGKey(1))
+        p2 = model.init(jax.random.PRNGKey(2))
+        _SETUP_CACHE[arch] = (cfg, model, (p0, p1, p2))
+    return _SETUP_CACHE[arch]
+
+
+def _prompt(cfg, length, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (length,), 0,
+                              cfg.vocab_size, dtype=jnp.int32)
+
+
+def _reference_tokens(model, params, prompt, n_new):
+    out, _ = generate(model, params, prompt[None, :], n_new)
+    return [int(t) for t in out[0]]
+
+
+# the acceptance trio: attention-KV, SSM state, sliding-window cache —
+# per-slot pinning must bitwise-select every cache layout correctly
+@pytest.mark.parametrize("arch",
+                         ["internlm2-1.8b", "mamba2-2.7b", "gemma3-1b"])
+def test_token_exact_under_mid_decode_swap(arch):
+    """A publish lands while request A is mid-decode; B is admitted after.
+    A must finish token-exact on its admission weights (as if no publish
+    ever happened) and B token-exact on the new generation — while the
+    single-bulk-transfer-per-decode-call invariant holds."""
+    cfg, model, (p0, p1, _) = _setup(arch)
+    pa = _prompt(cfg, 9, seed=1)
+    pb = _prompt(cfg, 7, seed=2)
+    n_new = 12
+
+    engine = CompiledServingEngine(model, p0, max_batch=2, max_seq=64,
+                                   decode_block=4)
+    a = Request(rid=0, prompt=pa, max_new_tokens=n_new)
+    b = Request(rid=1, prompt=pb, max_new_tokens=n_new)
+    engine.submit(a)
+    engine.step()                                # A is mid-decode (4 of 12)
+    assert engine.publish(p1) is True            # inactive buffer is free
+    assert engine.generation == 1
+    engine.submit(b)                             # admitted at generation 1
+    while engine.active or engine.waiting:
+        engine.step()
+
+    assert a.done and b.done
+    assert (a.generation, b.generation) == (0, 1)
+    assert a.generated == _reference_tokens(model, p0, pa, n_new), \
+        "in-flight request's tokens changed under a mid-decode publish"
+    assert b.generated == _reference_tokens(model, p1, pb, n_new), \
+        "post-publish admission did not serve the new generation"
+    st = engine.stats
+    assert st["dual_decode_calls"] > 0, \
+        "generations never overlapped — the swap was not mid-decode"
+    assert st["decode_transfers"] == st["decode_calls"]
+    assert st["publish_swaps"] == 1
+
+
+def test_publish_deferred_until_pinned_buffer_drains():
+    """Two live generations already occupy both buffers: a third publish
+    must defer (never clobber weights a request still reads), then apply
+    once the pinned generation drains; the next admission serves it."""
+    cfg, model, (p0, p1, p2) = _setup("internlm2-1.8b")
+    long_req = Request(rid=0, prompt=_prompt(cfg, 9, seed=1),
+                       max_new_tokens=16)
+    engine = CompiledServingEngine(model, p0, max_batch=2, max_seq=64,
+                                   decode_block=4)
+    engine.submit(long_req)
+    engine.step()                                 # pins buffer 0 (gen 0)
+    assert engine.publish(p1) is True             # buffer 1 <- gen 1
+    mid_req = Request(rid=1, prompt=_prompt(cfg, 7, seed=2),
+                      max_new_tokens=4)
+    engine.submit(mid_req)                        # pins buffer 1 (gen 1)
+
+    assert engine.publish(p2) is False            # target = buffer 0: busy
+    assert engine.generation == 1                 # still serving gen 1
+    while not long_req.done:
+        engine.step()
+    # the drain freed buffer 0; the deferred generation must now be live
+    assert engine.generation == 2
+    late = Request(rid=2, prompt=_prompt(cfg, 5, seed=3), max_new_tokens=6)
+    engine.submit(late)
+    while engine.active or engine.waiting:
+        engine.step()
+    assert late.generation == 2
+    assert late.generated == _reference_tokens(
+        model, p2, late.prompt, 6)
+    assert long_req.generated == _reference_tokens(
+        model, p0, long_req.prompt, 16)
+    assert engine.stats["publish_swaps"] == 2
+    assert engine.stats["decode_transfers"] == engine.stats["decode_calls"]
+
+
+def test_publish_superseded_and_stale():
+    """Only the newest deferred publish survives; a stale generation
+    number is rejected outright."""
+    cfg, model, (p0, p1, p2) = _setup("internlm2-1.8b")
+    engine = CompiledServingEngine(model, p0, max_batch=2, max_seq=64,
+                                   decode_block=4)
+    req = Request(rid=0, prompt=_prompt(cfg, 9, seed=1), max_new_tokens=12)
+    engine.submit(req)
+    engine.step()                                 # pins buffer 0
+    assert engine.publish(p1) is True             # gen 1 live in buffer 1
+    assert engine.publish(p2) is False            # deferred (buffer 0 busy)
+    assert engine.publish(p1, generation=1) is False   # stale: already live
+    p3 = jax.tree_util.tree_map(lambda x: x * 2, p2)
+    assert engine.publish(p3) is False            # deferred, supersedes p2
+    assert engine.stats["publish_superseded"] == 1
+    while engine.active or engine.waiting:
+        engine.step()
+    engine._admit()                               # retry point for pending
+    # generation numbering never reused: p2's queued gen 2 was discarded,
+    # p3 took gen 3
+    assert engine.generation == 3
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree_util.tree_leaves(engine.params)[0]),
+        np.asarray(jax.tree_util.tree_leaves(p3)[0]))
+
+
+def test_publish_shape_mismatch_raises():
+    cfg, model, (p0, _, _) = _setup("internlm2-1.8b")
+    engine = CompiledServingEngine(model, p0, max_batch=2, max_seq=64)
+    bad = jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape + (1,),
+                                                     x.dtype), p0)
+    with pytest.raises(ValueError, match="different model config"):
+        engine.publish(bad)
+
+
+def test_weight_publisher_requires_sink():
+    with pytest.raises(ValueError, match="somewhere to publish"):
+        WeightPublisher()
+
+
+def _stacked_state(trees, step):
+    """Phase-2-shaped TrainState: leading worker axis on every leaf."""
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+    W = len(trees)
+    return init_train_state({"params": stacked, "state": {}},
+                            opt_state={}, step=0)._replace(
+        step=jnp.full((W,), step, jnp.int32))
+
+
+def test_weight_publisher_epoch_hook_folds_running_average(tmp_path):
+    """Two epoch boundaries: publish g is the streaming mean of the first
+    g across-worker averages — Algorithm 1's phase-3 average computed
+    online, one snapshot per epoch."""
+    d = str(tmp_path)
+    w = [{"k": jnp.full((3,), float(i), jnp.float32)} for i in range(4)]
+    pub = WeightPublisher(directory=d, ensemble=True)
+
+    pub.on_epoch(_stacked_state([w[0], w[1]], step=10), 10)
+    pub.on_epoch(_stacked_state([w[2], w[3]], step=20), 20)
+
+    pubs = list_publishes(d)
+    assert [p["generation"] for p in pubs] == [1, 2]
+    assert [p["step"] for p in pubs] == [10, 20]
+    assert pubs[1]["meta"]["folds"] == 2
+    g1 = load_publish(pubs[0]["path"], w[0])
+    g2 = load_publish(pubs[1]["path"], w[0])
+    # gen 1 = across-worker mean(w0, w1) = average_stacked of that epoch;
+    # gen 2 = streaming mean of the two epoch means
+    epoch1 = average_stacked(jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), w[0], w[1]))
+    np.testing.assert_allclose(np.asarray(g1["k"]), np.asarray(epoch1["k"]))
+    np.testing.assert_allclose(np.asarray(g1["k"]), 0.5)
+    np.testing.assert_allclose(np.asarray(g2["k"]), (0.5 + 2.5) / 2)
+
+
+def test_weight_publisher_every_skips_boundaries(tmp_path):
+    d = str(tmp_path)
+    w = {"k": jnp.ones((2,), jnp.float32)}
+    pub = WeightPublisher(directory=d, ensemble=False, every=2)
+    assert pub.on_epoch(init_train_state({"params": w, "state": {}},
+                                         opt_state={}, step=5), 5) is None
+    assert pub.on_epoch(init_train_state({"params": w, "state": {}},
+                                         opt_state={}, step=9), 9) == 1
+    assert len(list_publishes(d)) == 1
+
+
+def test_publisher_engine_and_follower_roundtrip(tmp_path):
+    """In-process engine swap and the cross-process follower observe the
+    SAME generation: snapshot-first ordering means a follower can never be
+    ahead of the durable record."""
+    d = str(tmp_path)
+    cfg, model, (p0, p1, _) = _setup("internlm2-1.8b")
+    engine = CompiledServingEngine(model, p0, max_batch=2, max_seq=64)
+    pub = WeightPublisher([engine], directory=d, ensemble=False)
+    follower = PublishFollower(d, template=p0)
+    assert follower.poll() is None               # nothing published yet
+
+    gen = pub.publish(p1, step=17)
+    assert gen == 1 and engine.generation == 1
+    polled = follower.poll()
+    assert polled is not None
+    got_gen, got_params = polled
+    assert got_gen == 1
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree_util.tree_leaves(got_params)[0]),
+        np.asarray(jax.tree_util.tree_leaves(p1)[0]))
+    assert follower.poll() is None               # already consumed
+    latest = find_latest_publish(d)
+    assert latest["generation"] == 1 and latest["step"] == 17

@@ -70,6 +70,44 @@ def test_average_of_identical_models_is_identity():
                                    atol=1e-6)
 
 
+def test_recompute_bn_stats_weights_by_batch_size():
+    """Regression: aggregation must be batch-size-weighted, not a plain
+    mean over batches — a short final batch would otherwise pull the
+    recomputed statistics off the true one-pass values."""
+    from repro.core.averaging import recompute_bn_stats
+
+    def stats_fn(params, batch):
+        x = batch["x"]
+        return {"bn": {"mean": jnp.mean(x), "var": jnp.var(x)}}
+
+    full = jnp.arange(6.0)                       # batch of 6
+    tail = jnp.asarray([30.0, 60.0])             # short tail batch of 2
+    out = recompute_bn_stats(stats_fn, {}, [{"x": full}, {"x": tail}])
+    want_mean = (6 * float(jnp.mean(full)) + 2 * float(jnp.mean(tail))) / 8
+    want_var = (6 * float(jnp.var(full)) + 2 * float(jnp.var(tail))) / 8
+    np.testing.assert_allclose(float(out["bn"]["mean"]), want_mean,
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(out["bn"]["var"]), want_var, rtol=1e-6)
+    # an unweighted mean over the two batches would give a different value
+    assert abs(want_mean - (float(jnp.mean(full))
+                            + float(jnp.mean(tail))) / 2) > 1.0
+
+
+def test_recompute_bn_stats_empty_iterable_raises():
+    """Silently returning nothing would leave a served BN model on stale
+    pre-average statistics."""
+    from repro.core.averaging import recompute_bn_stats
+    with pytest.raises(ValueError, match="no batches"):
+        recompute_bn_stats(lambda p, b: {}, {}, [])
+
+
+def test_recompute_bn_stats_no_array_leaves_raises():
+    from repro.core.averaging import recompute_bn_stats
+    with pytest.raises(ValueError, match="batch size"):
+        recompute_bn_stats(lambda p, b: {"m": jnp.float32(0)}, {},
+                           [{"seed": 3}])
+
+
 # ---------------------------------------------------------------------------
 # schedules
 # ---------------------------------------------------------------------------
