@@ -187,9 +187,15 @@ class Checkpointer:
         self.directory = directory
         self.every = every
         self.keep = keep
+        # seed the cadence from snapshots already on disk: a RESUMED run
+        # must not re-snapshot at its first boundary regardless of how far
+        # it is from the last durable step
         self._last_saved: Dict[str, int] = {}
         if directory:
             os.makedirs(directory, exist_ok=True)
+            for c in list_checkpoints(directory):
+                self._last_saved[c["tag"]] = max(
+                    self._last_saved.get(c["tag"], 0), c["step"])
 
     def _path(self, tag: str, step: int) -> str:
         return os.path.join(self.directory, f"{tag}-step{step:08d}.msgpack")

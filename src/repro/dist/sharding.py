@@ -234,6 +234,22 @@ def cache_batch_dim(path: str) -> int:
     return 1 if path.split("/", 1)[0] == "units" else 0
 
 
+def page_pool_dim(path: str) -> Optional[int]:
+    """Page-dim position of a paged KV-pool leaf, or None for per-slot
+    (dense) cache leaves.
+
+    Paged layers store their KV under a ``p`` layout key (vs ``a`` for
+    dense) — a global ``(n_pages, page_size, ...)`` pool shared by every
+    slot, indexed through per-slot block tables. The pool has no batch
+    dim; the shardable resident-state dim is the PAGE dim, which sits
+    where the batch dim would (dim 1 under the stacked ``units`` subtree,
+    dim 0 elsewhere)."""
+    parts = path.split("/")
+    if len(parts) >= 2 and parts[-2] == "p":
+        return 1 if parts[0] == "units" else 0
+    return None
+
+
 def data_axes(tree):
     """Pytree of ints: which dim of each leaf is the batch/data dim.
 
@@ -246,11 +262,15 @@ def data_axes(tree):
 
 def cache_shardings(mesh, tree, batch: Optional[int] = None):
     """Decode-cache shardings: the batch dim (position given by
-    ``cache_batch_dim``) goes on ``data``; all other dims replicate."""
+    ``cache_batch_dim``) goes on ``data``; paged-pool leaves shard their
+    PAGE dim (``page_pool_dim``) on ``data`` instead — pages, like slots,
+    are the unit of resident serving state. All other dims replicate."""
     def leaf_sharding(path, leaf):
         if getattr(leaf, "ndim", 0) == 0:
             return NamedSharding(mesh, P())
-        bd = cache_batch_dim(path_str(path))
+        ps = path_str(path)
+        pd = page_pool_dim(ps)
+        bd = cache_batch_dim(ps) if pd is None else pd
         if bd >= leaf.ndim:
             return NamedSharding(mesh, P())
         axes: List[Optional[str]] = [None] * leaf.ndim

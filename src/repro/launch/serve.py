@@ -138,7 +138,8 @@ def follow(model: Model, cfg, params, args) -> dict:
     max_seq = args.prompt_len + args.new_tokens + 8
     engine = CompiledServingEngine(
         model, params, max_batch=args.batch, max_seq=max_seq,
-        decode_block=args.decode_block, prefill_buckets=[args.prompt_len])
+        decode_block=args.decode_block, prefill_buckets=[args.prompt_len],
+        kv_layout=args.kv_layout, page_size=args.page_size)
     follower = PublishFollower(args.follow, template=params)
     upd = follower.poll()
     if upd is not None:                       # seed from the newest publish
@@ -209,7 +210,16 @@ def main():
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kv-int8", action="store_true",
-                    help="int8-quantized KV cache (halves cache memory)")
+                    help="int8-quantized KV cache (4x tokens per cache "
+                         "byte vs f32)")
+    ap.add_argument("--kv-layout", default="auto",
+                    choices=["auto", "dense", "paged"],
+                    help="compiled-engine KV layout in --follow mode: "
+                         "paged allocates cache pages on demand from a "
+                         "shared pool (auto = paged when the arch "
+                         "supports it)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page for --kv-layout paged")
     ap.add_argument("--follow", default="",
                     help="live-follow a publish directory: hot-swap new "
                          "weight generations into a running engine while "

@@ -248,6 +248,84 @@ def gqa_empty_cache(cfg: ModelConfig, batch: int, cache_len: int, window: int,
 
 
 # ---------------------------------------------------------------------------
+# paged KV pool (vLLM-style block tables, JAX static shapes)
+# ---------------------------------------------------------------------------
+
+
+def gqa_empty_page_pool(cfg: ModelConfig, n_pages: int, page_size: int,
+                        dtype):
+    """Global device-resident KV page pool shared by every slot:
+    ``(n_pages, page_size, KVH, Dh)`` per leaf. Page 0 is RESERVED as the
+    null page — block-table entries of unallocated regions (and of freed
+    slots) point at it, so out-of-extent cache writes land in garbage that
+    the position mask never admits."""
+    KVH, Dh = cfg.n_kv_heads, cfg.head_dim
+    if cfg.kv_cache_dtype == "int8":
+        zq = jnp.zeros((n_pages, page_size, KVH, Dh), jnp.int8)
+        zs = jnp.full((n_pages, page_size, KVH, 1), 1e-8 / 127.0,
+                      jnp.float32)
+        return {"k": zq, "k_scale": zs, "v": zq, "v_scale": zs}
+    z = jnp.zeros((n_pages, page_size, KVH, Dh), dtype)
+    return {"k": z, "v": z}
+
+
+def gqa_decode_paged(params, x, cache, pos, block_tables, cfg: ModelConfig,
+                     *, positions=None, use_rope: bool = True):
+    """One-token decode against a paged KV pool.
+
+    cache leaves: ``(n_pages, page_size, KVH, Dh)`` global pool;
+    ``block_tables``: (B, M) int32 page ids per slot (entry 0 = the
+    reserved null page); pos: (B,) per-request absolute positions.
+
+    The new token writes to ``pool[bt[b, pos//P], pos % P]`` and attention
+    gathers each slot's pages back into a contiguous (B, M*P) view. Rows
+    <= pos of that view hold exactly the values a dense per-slot cache
+    would (the engine scatters prefill rows page-aligned), and rows > pos
+    are masked to an exact-zero softmax contribution — so greedy tokens
+    match the dense layout bitwise. Returns (out, new_cache)."""
+    dtype = x.dtype
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(params, x, x, cfg, dtype)
+    pos = jnp.asarray(pos)
+    if use_rope:
+        if positions is None:
+            positions = pos[:, None].astype(jnp.int32)
+        q, k_new = _rope(cfg, q, k_new, positions)
+
+    P = cache["k"].shape[1]                       # page_size
+    M = block_tables.shape[1]
+    page = block_tables[jnp.arange(B), pos // P]  # (B,) write page per slot
+    off = jnp.mod(pos, P)
+
+    def upd(buf, new):
+        # each active slot owns its write page exclusively; frozen slots
+        # point at their own pages or the null page — never another slot's
+        return buf.at[page, off].set(new[:, 0].astype(buf.dtype))
+
+    if "k_scale" in cache:      # int8 pool: quantize the new token
+        knq, kns = quantize_kv(k_new)
+        vnq, vns = quantize_kv(v_new)
+        new_cache = {"k": upd(cache["k"], knq),
+                     "k_scale": upd(cache["k_scale"], kns),
+                     "v": upd(cache["v"], vnq),
+                     "v_scale": upd(cache["v_scale"], vns)}
+    else:
+        new_cache = {"k": upd(cache["k"], k_new),
+                     "v": upd(cache["v"], v_new)}
+
+    def gather(buf):
+        g = jnp.take(buf, block_tables, axis=0)   # (B, M, P, ...)
+        return g.reshape((B, M * P) + buf.shape[2:])
+
+    k, v = _cache_kv(cfg, {kk: gather(vv) for kk, vv in new_cache.items()},
+                     dtype)
+    kpos = _slot_positions(pos, M * P, 0)
+    out = _cache_attend(q, k, v, kpos=kpos)
+    out = mdot(out.reshape(B, 1, -1), params["wo"], dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
 # MLA (multi-head latent attention, MiniCPM3/DeepSeek-V2 style)
 # ---------------------------------------------------------------------------
 

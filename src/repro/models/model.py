@@ -87,6 +87,27 @@ class Model:
         return unit, n_units, tail
 
     # ------------------------------------------------------------------
+    # paged-cache capability
+    # ------------------------------------------------------------------
+
+    def pageable(self, kind: LayerKind) -> bool:
+        """Whether a layer's KV cache can live in a paged page pool:
+        full-attention GQA self-attention only. Sliding-window caches are
+        already O(window), SSM states are O(1), and MLA/cross caches keep
+        their dense layout behind this capability gate."""
+        return (kind.block == "attn" and kind.window == 0
+                and not kind.cross and self.cfg.attention == "gqa")
+
+    @property
+    def has_pageable(self) -> bool:
+        """True if any layer can use a paged KV pool (the serving engine's
+        ``kv_layout="auto"`` resolves to paged exactly then)."""
+        kinds = list(self.unit_kinds) + list(self.tail_kinds)
+        if self.cfg.family == "hybrid":
+            kinds.append(LayerKind("attn"))
+        return any(self.pageable(k) for k in kinds)
+
+    # ------------------------------------------------------------------
     # init
     # ------------------------------------------------------------------
 
@@ -218,7 +239,8 @@ class Model:
     # block execution (decode: one token)
     # ------------------------------------------------------------------
 
-    def _block_decode(self, p, h, kind: LayerKind, cache, pos, positions):
+    def _block_decode(self, p, h, kind: LayerKind, cache, pos, positions,
+                      block_tables=None):
         cfg = self.cfg
         if kind.block == "mamba":
             x = apply_norm(p["ln1"], h, cfg.norm, cfg.norm_eps)
@@ -226,7 +248,14 @@ class Model:
             return h + y, {"m": mc}
         new_cache = {}
         x = apply_norm(p["ln1"], h, cfg.norm, cfg.norm_eps)
-        if cfg.attention == "mla":
+        if "p" in cache:        # paged KV pool (layout owned by repro.dist)
+            y, pc = attn.gqa_decode_paged(
+                p["attn"], x, cache["p"], pos, block_tables, cfg,
+                positions=positions if self.use_rope else None,
+                use_rope=self.use_rope)
+            new_cache["p"] = pc
+            ac = None
+        elif cfg.attention == "mla":
             y, ac = attn.mla_decode(p["attn"], x, cache["a"], pos, cfg,
                                     positions=positions)
         else:
@@ -234,7 +263,8 @@ class Model:
                 p["attn"], x, cache["a"], pos, cfg, window=kind.window,
                 positions=positions if self.use_rope else None,
                 use_rope=self.use_rope)
-        new_cache["a"] = ac
+        if ac is not None:
+            new_cache["a"] = ac
         h = h + y
         if kind.cross and "x" in cache:
             x = apply_norm(p["lnx"], h, cfg.norm, cfg.norm_eps)
@@ -438,9 +468,12 @@ class Model:
 
     # -------------------------- decode -------------------------------
 
-    def decode(self, params, cache, token, pos, *, positions=None):
+    def decode(self, params, cache, token, pos, *, positions=None,
+               block_tables=None):
         """One decode step. token: (B,1) int32; pos: scalar absolute
         position, or (B,) per-request positions (continuous batching).
+        ``block_tables``: (B, M) int32 per-slot page tables, required when
+        the cache holds paged (``p``-layout) KV pools.
         Returns (logits (B, vocab), new_cache)."""
         cfg = self.cfg
         B = token.shape[0]
@@ -458,11 +491,13 @@ class Model:
             if cfg.family == "hybrid":
                 h, sc = self._block_decode(params["shared"], h,
                                            LayerKind("attn"),
-                                           unit_c["shared"], pos, positions)
+                                           unit_c["shared"], pos, positions,
+                                           block_tables)
                 new_c["shared"] = sc
             for i, kind in enumerate(self.unit_kinds):
                 h, c = self._block_decode(_tree_index(unit_p, i), h, kind,
-                                          unit_c[str(i)], pos, positions)
+                                          unit_c[str(i)], pos, positions,
+                                          block_tables)
                 new_c[str(i)] = c
             return h, new_c
 
@@ -481,7 +516,8 @@ class Model:
             new_cache["units"] = nc
         for i, kind in enumerate(self.tail_kinds):
             h, c = self._block_decode(_tree_index(params["tail"], i), h, kind,
-                                      cache[f"t{i}"], pos, positions)
+                                      cache[f"t{i}"], pos, positions,
+                                      block_tables)
             new_cache[f"t{i}"] = c
         h = apply_norm(params["final_norm"], h, cfg.norm, cfg.norm_eps)
         logits = self._head(params, h)[:, 0]
@@ -489,8 +525,13 @@ class Model:
 
     # -------------------------- empty cache --------------------------
 
-    def empty_cache(self, batch: int, cache_len: int):
-        """Zero-initialized cache (for dry-run decode lowering)."""
+    def empty_cache(self, batch: int, cache_len: int, *, page_pool=None):
+        """Zero-initialized cache (for dry-run decode lowering).
+
+        ``page_pool``: optional ``(n_pages, page_size)`` — pageable layers
+        (see ``pageable``) then hold a global ``p``-layout page pool
+        instead of a per-slot ``a`` cache; non-pageable layers keep their
+        dense layout, so one cache tree can mix both."""
         cfg = self.cfg
         dt = self.dtype
 
@@ -498,7 +539,9 @@ class Model:
             if kind.block == "mamba":
                 return {"m": mamba2.mamba_empty_cache(cfg, batch, dt)}
             c = {}
-            if cfg.attention == "mla":
+            if page_pool is not None and self.pageable(kind):
+                c["p"] = attn.gqa_empty_page_pool(cfg, *page_pool, dt)
+            elif cfg.attention == "mla":
                 c["a"] = attn.mla_empty_cache(cfg, batch, cache_len, dt)
             else:
                 c["a"] = attn.gqa_empty_cache(cfg, batch, cache_len,

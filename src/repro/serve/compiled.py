@@ -48,17 +48,33 @@ python engine and single-request generation in tests/test_serve_compiled).
     up the latest generation; the swap itself is pure host bookkeeping +
     one async host->device params transfer, so ``decode_transfers ==
     decode_calls`` holds across swaps (tests/test_publish.py).
+
+  * **Paged KV cache.** With ``kv_layout="paged"`` (the default resolution
+    of ``"auto"`` whenever the model has full-attention GQA layers), KV
+    lives in a global device page pool plus per-slot block tables instead
+    of one dense ``max_seq`` slab per slot: admission allocates only the
+    pages the prompt needs, decode appends pages on demand (host-side
+    allocation between fused calls — a tiny async h->d block-table upload,
+    never a d->h sync), and a freed request returns its pages immediately.
+    Memory then caps concurrency by RESIDENT TOKENS, not by
+    slots x max_seq; ``kv_cache_dtype="int8"`` quantizes the pool
+    (symmetric per-(token, head), models/attention.py) for ~4x more
+    resident tokens per byte. Non-pageable layers (sliding-window, SSM,
+    MLA, cross) keep their dense layout in the same cache tree; the page
+    pool's layout/placement is owned by ``repro.dist.page_pool_dim``.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.dist.sharding import (batch_shardings, cache_batch_dim,
-                                 cache_shardings, path_str)
+                                 cache_shardings, page_pool_dim, path_str)
 from repro.models.model import Model
 from repro.serve.engine import Request
 
@@ -73,16 +89,18 @@ class DecodeState(NamedTuple):
     remaining: jnp.ndarray   # (B,) int32 — decode steps left in the budget
     eos: jnp.ndarray         # (B,) int32 — per-slot EOS id, -1 = none
     rng: jnp.ndarray         # PRNG key for categorical sampling
+    block_tables: jnp.ndarray  # (B, M) int32 page ids; (B, 0) when dense
 
 
 def decode_state_shardings(mesh, state: DecodeState) -> DecodeState:
     """NamedSharding tree for a DecodeState: cache leaves by the
-    ``cache_batch_dim`` rule, per-slot vectors batch-sharded, rng
-    replicated — so a multi-host serving mesh places slots on ``data``."""
+    ``cache_batch_dim`` / ``page_pool_dim`` rules, per-slot vectors (and
+    block tables) batch-sharded, rng replicated — so a multi-host serving
+    mesh places slots and pool pages on ``data``."""
     vec_sh = batch_shardings(
         mesh, {"tokens": state.tokens, "positions": state.positions,
                "active": state.active, "remaining": state.remaining,
-               "eos": state.eos})
+               "eos": state.eos, "block_tables": state.block_tables})
     return DecodeState(
         cache=cache_shardings(mesh, state.cache),
         rng=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
@@ -105,23 +123,77 @@ class CompiledServingEngine:
 
     Args beyond the oracle's: ``decode_block`` (K — model steps fused per
     host call), ``prefill_buckets`` (padded prompt lengths; None = doubling
-    set from ``default_buckets``), ``sample`` ("greedy" | "categorical"),
-    ``temperature`` and ``rng`` for sampling.
+    set from ``default_buckets``; always completed with ``max_seq`` so no
+    prompt falls back to an uncounted exact-length compile), ``sample``
+    ("greedy" | "categorical"), ``temperature`` and ``rng`` for sampling.
+
+    Paged-cache args: ``kv_layout`` — "dense" (one max_seq cache row per
+    slot), "paged" (global page pool + per-slot block tables for the
+    model's pageable attention layers), or "auto" (paged iff the model has
+    any pageable layer); ``page_size`` (tokens per page); ``n_pages``
+    (pool size incl. the reserved null page 0; None = dense-equivalent
+    capacity, so admission never waits on pages by default);
+    ``kv_cache_dtype`` — overrides the model config's KV dtype (e.g.
+    "int8") by rebuilding the Model on an updated config, so prefill,
+    decode and the pool all quantize identically.
     """
 
     def __init__(self, model: Model, params, *, max_batch: int = 4,
                  max_seq: int = 256, decode_block: int = 8,
                  prefill_buckets: Optional[Sequence[int]] = None,
                  sample: str = "greedy", temperature: float = 1.0,
-                 rng=None, generation: int = 0):
+                 rng=None, generation: int = 0,
+                 kv_layout: str = "auto", page_size: int = 16,
+                 n_pages: Optional[int] = None,
+                 kv_cache_dtype: Optional[str] = None):
         if sample not in ("greedy", "categorical"):
             raise ValueError(f"unknown sample mode {sample!r}")
+        if kv_layout not in ("auto", "paged", "dense"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if kv_cache_dtype is not None \
+                and kv_cache_dtype != model.cfg.kv_cache_dtype:
+            # rebuild on the updated config so EVERY path (prefill scatter,
+            # in-loop decode writes, pool leaves) quantizes the same way
+            model = Model(dataclasses.replace(
+                model.cfg, kv_cache_dtype=kv_cache_dtype))
         self.model = model
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.decode_block = decode_block
         self.sample = sample
         self.temperature = temperature
+        if kv_layout == "auto":
+            kv_layout = "paged" if model.has_pageable else "dense"
+        elif kv_layout == "paged" and not model.has_pageable:
+            raise ValueError(
+                "kv_layout='paged' but no layer of this model is pageable "
+                "(full-attention GQA); use 'dense' or 'auto'")
+        self.kv_layout = kv_layout
+        self._paged = kv_layout == "paged"
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.page_size = page_size
+        # paged caches round the gathered length up to whole pages; the
+        # rows past max_seq are never unmasked so tokens stay exact
+        self._cache_len = (-(-max_seq // page_size) * page_size
+                           if self._paged else max_seq)
+        self._n_blocks = self._cache_len // page_size if self._paged else 0
+        if n_pages is None:
+            # dense-equivalent pool (+1 for the reserved null page)
+            n_pages = max_batch * self._n_blocks + 1
+        self.n_pages = n_pages if self._paged else 0
+        if self._paged and self.n_pages < 2:
+            raise ValueError("paged layout needs n_pages >= 2 "
+                             "(page 0 is the reserved null page)")
+        # host-owned allocator. Page 0 is never handed out: block-table
+        # entries for unallocated/freed regions stay 0, so garbage writes
+        # from frozen slots land on the null page and the position mask
+        # keeps its rows out of every attention sum.
+        self._free_pages: List[int] = list(range(1, self.n_pages))
+        self.slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
+        self.slot_max_blocks: List[int] = [0] * max_batch
+        self._host_bt = np.zeros((max_batch, self._n_blocks), np.int32)
+        self._bt_dirty = False
         # double-buffered device-resident param sets: slot j of _buffers
         # holds weight generation _buf_gen[j]; _latest names the buffer new
         # admissions pin to. publish() fills the inactive buffer, so an
@@ -131,8 +203,14 @@ class CompiledServingEngine:
         self._buf_gen: List[int] = [generation, generation - 1]
         self._latest: int = 0
         self._pending: Optional[Tuple[int, Any]] = None
-        self.buckets = tuple(sorted(prefill_buckets)) \
-            if prefill_buckets else default_buckets(max_seq)
+        if prefill_buckets:
+            bs = sorted({int(b) for b in prefill_buckets if b <= max_seq})
+            if not bs or bs[-1] != max_seq:
+                bs.append(max_seq)    # cap every bucket set at max_seq so
+            self.buckets = tuple(bs)  # _bucket always finds a real bucket
+        else:
+            self.buckets = default_buckets(max_seq)
+        self._compiled_buckets: set = set()
         self.state = self._empty_state(
             rng if rng is not None else jax.random.PRNGKey(0))
         self.slot_req: List[Optional[Request]] = [None] * max_batch
@@ -147,10 +225,12 @@ class CompiledServingEngine:
             "decode_calls": 0, "decode_transfers": 0, "decode_steps": 0,
             "admissions": 0, "admit_transfers": 0, "prefill_compiles": 0,
             "publishes": 0, "publish_swaps": 0, "publish_superseded": 0,
-            "dual_decode_calls": 0,
+            "dual_decode_calls": 0, "admit_page_waits": 0,
         }
+        cache_len = self._cache_len
         self._prefill_fn = jax.jit(
-            lambda p, t, L: model.prefill(p, t, cache_len=max_seq, length=L))
+            lambda p, t, L: self.model.prefill(p, t, cache_len=cache_len,
+                                               length=L))
         self._admit_fn = jax.jit(self._admit_device, donate_argnums=(0,))
         self._decode_fn = jax.jit(self._decode_k, donate_argnums=(1,))
         self._decode_dual_fn = jax.jit(self._decode_k_dual,
@@ -172,14 +252,17 @@ class CompiledServingEngine:
 
     def _empty_state(self, rng) -> DecodeState:
         B = self.max_batch
+        pool = (self.n_pages, self.page_size) if self._paged else None
         return DecodeState(
-            cache=self.model.empty_cache(B, self.max_seq),
+            cache=self.model.empty_cache(B, self._cache_len,
+                                         page_pool=pool),
             tokens=jnp.zeros((B,), jnp.int32),
             positions=jnp.zeros((B,), jnp.int32),
             active=jnp.zeros((B,), bool),
             remaining=jnp.zeros((B,), jnp.int32),
             eos=jnp.full((B,), -1, jnp.int32),
-            rng=rng)
+            rng=rng,
+            block_tables=jnp.zeros((B, self._n_blocks), jnp.int32))
 
     def _sample(self, logits, key):
         """(B, vocab) logits -> (B,) int32 next tokens."""
@@ -190,21 +273,47 @@ class CompiledServingEngine:
             axis=-1).astype(jnp.int32)
 
     def _admit_device(self, state: DecodeState, prefill_cache, first_tok,
-                      slot, length, budget, eos_id, active) -> DecodeState:
+                      slot, length, budget, eos_id, active,
+                      page_row) -> DecodeState:
         """Scatter a batch=1 prefill cache + fresh slot scalars into
         ``slot``. One compiled program for every admission (prefill caches
-        are always padded to ``max_seq``)."""
-        def scatter(path, dst, src):
-            # the cache's batch-dim layout is owned by repro.dist — the
-            # same rule cache_shardings uses to put the batch dim on `data`
-            bd = cache_batch_dim(path_str(path))
+        are always padded to ``_cache_len``).
+
+        Dense leaves land via ``dynamic_update_slice`` on the slot's batch
+        row. Paged (``p``-layout) pool leaves take the prefill's DENSE
+        ``a`` rows, fold them into whole pages, and scatter them to the
+        slot's pages named by ``page_row`` — entries past the prompt are 0,
+        so their (garbage) pages land on the reserved null page. The host
+        block-table mirror is uploaded separately (see ``step``), never
+        inside this donated program."""
+        src = {path_str(kp): leaf for kp, leaf in
+               jax.tree_util.tree_flatten_with_path(prefill_cache)[0]}
+
+        def scatter(path, dst):
+            # cache layout (batch dim / page dim) is owned by repro.dist —
+            # the same rules cache_shardings uses to place leaves on `data`
+            ps = path_str(path)
+            pd = page_pool_dim(ps)
+            if pd is not None:
+                parts = ps.split("/")
+                parts[-2] = "a"            # pool leaf <- dense prefill leaf
+                leaf = src["/".join(parts)]
+                rows = jnp.take(leaf, 0, axis=cache_batch_dim(ps))  # B=1
+                M, P = page_row.shape[0], dst.shape[pd + 1]
+                rows = rows.reshape(rows.shape[:pd] + (M, P)
+                                    + rows.shape[pd + 1:]).astype(dst.dtype)
+                if pd == 1:                # stacked-units pool
+                    return dst.at[:, page_row].set(rows)
+                return dst.at[page_row].set(rows)
+            leaf = src[ps]
+            bd = cache_batch_dim(ps)
             start = [jnp.int32(0)] * dst.ndim
             start[bd] = slot
             return jax.lax.dynamic_update_slice(
-                dst, src.astype(dst.dtype), tuple(start))
+                dst, leaf.astype(dst.dtype), tuple(start))
 
         cache = jax.tree_util.tree_map_with_path(
-            scatter, state.cache, prefill_cache)
+            lambda path, dst: scatter(path, dst), state.cache)
         return DecodeState(
             cache=cache,
             tokens=state.tokens.at[slot].set(first_tok),
@@ -212,7 +321,8 @@ class CompiledServingEngine:
             active=state.active.at[slot].set(active),
             remaining=state.remaining.at[slot].set(budget),
             eos=state.eos.at[slot].set(eos_id),
-            rng=state.rng)
+            rng=state.rng,
+            block_tables=state.block_tables)
 
     def _advance(self, st: DecodeState, logits, cache):
         """Shared per-step bookkeeping after the model evaluation(s):
@@ -238,7 +348,8 @@ class CompiledServingEngine:
             active=act & ~done,
             remaining=rem1,
             eos=st.eos,
-            rng=rng), next_tok
+            rng=rng,
+            block_tables=st.block_tables), next_tok
 
     def _decode_k(self, params, state: DecodeState):
         """K fused decode steps under one jit. Returns (state, (B, K) token
@@ -247,14 +358,16 @@ class CompiledServingEngine:
 
         def body(st: DecodeState, _):
             logits, cache = model.decode(params, st.cache,
-                                         st.tokens[:, None], st.positions)
+                                         st.tokens[:, None], st.positions,
+                                         block_tables=st.block_tables)
             return self._advance(st, logits, cache)
 
         state, toks = jax.lax.scan(body, state, None,
                                    length=self.decode_block)
         return state, toks.T                      # (K, B) -> (B, K)
 
-    def _decode_k_dual(self, params_a, params_b, state: DecodeState, use_b):
+    def _decode_k_dual(self, params_a, params_b, state: DecodeState, use_b,
+                       use_b_pages):
         """K fused decode steps with TWO weight generations resident:
         every slot's logits and cache rows come from the param set its
         request was admitted under — ``jnp.where`` SELECTS between the two
@@ -263,23 +376,33 @@ class CompiledServingEngine:
         admission weights. Costs two model evaluations per step; the host
         dispatches this program only while generations are actually mixed
         (the old one drains as its requests finish). Still one bulk (B, K)
-        transfer per call — publishing adds no host syncs."""
+        transfer per call — publishing adds no host syncs.
+
+        ``use_b_pages`` is the page-pool analogue of the per-slot ``use_b``
+        selector: page i belongs to the slot that owns it, so selecting
+        per PAGE on pool leaves is exactly selecting per slot (unowned
+        pages hold garbage either way)."""
         model = self.model
 
         def body(st: DecodeState, _):
             logits_a, cache_a = model.decode(params_a, st.cache,
-                                             st.tokens[:, None], st.positions)
+                                             st.tokens[:, None], st.positions,
+                                             block_tables=st.block_tables)
             logits_b, cache_b = model.decode(params_b, st.cache,
-                                             st.tokens[:, None], st.positions)
+                                             st.tokens[:, None], st.positions,
+                                             block_tables=st.block_tables)
             logits = jnp.where(use_b[:, None], logits_b, logits_a)
 
             def pick(path, a, b):
-                # broadcast the per-slot selector along each cache leaf's
-                # batch dim — the dim owned by the repro.dist rule
-                bd = cache_batch_dim(path_str(path))
+                # broadcast the right selector along each cache leaf's
+                # batch dim / page dim — the dims owned by repro.dist rules
+                ps = path_str(path)
+                pd = page_pool_dim(ps)
+                sel, d = (use_b_pages, pd) if pd is not None \
+                    else (use_b, cache_batch_dim(ps))
                 shape = [1] * a.ndim
-                shape[bd] = a.shape[bd]
-                return jnp.where(use_b.reshape(shape), b, a)
+                shape[d] = a.shape[d]
+                return jnp.where(sel.reshape(shape), b, a)
 
             cache = jax.tree_util.tree_map_with_path(pick, cache_a, cache_b)
             return self._advance(st, logits, cache)
@@ -296,7 +419,76 @@ class CompiledServingEngine:
         for b in self.buckets:
             if b >= S:
                 return b
-        return S              # buckets capped below max_seq: exact-length
+        # unreachable: construction always ends the bucket set at max_seq
+        # and submit() rejects prompts longer than that
+        raise AssertionError(f"no prefill bucket covers length {S}")
+
+    def _run_prefill(self, bucket: int, padded, length):
+        """Dispatch the bucketed prefill, counting the compile the first
+        time each bucket's program is traced (warmup or post-warmup)."""
+        if bucket not in self._compiled_buckets:
+            self._compiled_buckets.add(bucket)
+            self.stats["prefill_compiles"] += 1
+        return self._prefill_fn(self.params, padded, jnp.int32(length))
+
+    # ---- host page allocator (paged layout only) ----------------------
+
+    def _full_blocks(self, S: int, max_new_tokens: int) -> int:
+        """Worst-case pages a request can ever touch (prompt + budget,
+        truncated at max_seq) — what admission must reserve."""
+        last = min(S + max_new_tokens - 1, self.max_seq - 1)
+        return last // self.page_size + 1
+
+    def _reserved_pages(self) -> int:
+        """Pages already promised to in-flight requests but not yet
+        allocated. Admission keeps ``free >= reserved`` so mid-decode
+        growth can never exhaust the pool."""
+        return sum(self.slot_max_blocks[i] - len(self.slot_pages[i])
+                   for i, r in enumerate(self.slot_req) if r is not None)
+
+    def _alloc_slot_pages(self, slot: int, need: int) -> None:
+        pages = self.slot_pages[slot]
+        while len(pages) < need:
+            if not self._free_pages:
+                raise RuntimeError(
+                    "page pool exhausted — admission reservation invariant "
+                    "violated (this is a bug)")
+            pid = self._free_pages.pop()
+            self._host_bt[slot, len(pages)] = pid
+            pages.append(pid)
+            self._bt_dirty = True
+
+    def _release_slot(self, slot: int) -> None:
+        self.slot_req[slot] = None
+        if self._paged:
+            self._free_pages.extend(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+            self.slot_max_blocks[slot] = 0
+            if self._host_bt[slot].any():
+                self._host_bt[slot] = 0
+                self._bt_dirty = True
+
+    def _ensure_pages(self) -> None:
+        """Grow every active slot's block table to cover the rows the next
+        fused block can write (host-side, between decode calls)."""
+        K, P = self.decode_block, self.page_size
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            # device position the slot's NEXT write lands on
+            p0 = self.slot_len[slot] + len(req.generated) - 1
+            last = min(p0 + K - 1, self.max_seq - 1)
+            # never past the admission-time reservation: a slot that stops
+            # mid-block (budget/EOS) freezes at a row max_blocks covers,
+            # so rows beyond it are never written while this slot owns it
+            self._alloc_slot_pages(
+                slot, min(last // P + 1, self.slot_max_blocks[slot]))
+
+    def _push_block_tables(self) -> None:
+        if self._bt_dirty:
+            self.state = self.state._replace(
+                block_tables=jnp.asarray(self._host_bt))  # async, tiny h->d
+            self._bt_dirty = False
 
     def submit(self, request: Request) -> None:
         S = request.prompt.shape[0]
@@ -304,6 +496,13 @@ class CompiledServingEngine:
             raise ValueError(
                 f"prompt of {S} tokens cannot fit the engine cache "
                 f"(max_seq={self.max_seq})")
+        if self._paged:
+            full = self._full_blocks(S, request.max_new_tokens)
+            if full > self.n_pages - 1:
+                raise ValueError(
+                    f"request needs {full} pages but the pool only has "
+                    f"{self.n_pages - 1} allocatable (n_pages={self.n_pages},"
+                    f" page_size={self.page_size})")
         self.waiting.append(request)
         self._admit()
 
@@ -322,14 +521,25 @@ class CompiledServingEngine:
             free = self._free_slots()
             if not free:
                 return
+            full_blocks = 0
+            if self._paged:
+                # head-of-line page gate: reserve the request's worst-case
+                # pages up front, or wait for in-flight requests to free
+                # some (FIFO — no later, smaller request jumps the queue)
+                head = self.waiting[0]
+                full_blocks = self._full_blocks(head.prompt.shape[0],
+                                                head.max_new_tokens)
+                if (len(self._free_pages) - self._reserved_pages()
+                        < full_blocks):
+                    self.stats["admit_page_waits"] += 1
+                    return
             slot = free[0]
             req = self.waiting.pop(0)
             S = req.prompt.shape[0]
             bucket = self._bucket(S)
             padded = jnp.pad(req.prompt[None, :].astype(jnp.int32),
                              ((0, 0), (0, bucket - S)))
-            logits, pc = self._prefill_fn(self.params, padded,
-                                          jnp.int32(S))
+            logits, pc = self._run_prefill(bucket, padded, S)
             if self.sample == "greedy":
                 tok = jnp.argmax(logits, -1).astype(jnp.int32)[0]
             else:
@@ -345,11 +555,20 @@ class CompiledServingEngine:
             done0 = (req.max_new_tokens <= 1
                      or (req.eos_id is not None and t0 == req.eos_id)
                      or S >= self.max_seq - 1)
+            page_row = np.zeros((self._n_blocks,), np.int32)
+            if self._paged and not done0:
+                # allocate only the PROMPT's pages now (rows 0..S — the
+                # prompt plus the first decode write); growth happens
+                # lazily in _ensure_pages as the request decodes
+                self.slot_max_blocks[slot] = full_blocks
+                self._alloc_slot_pages(
+                    slot, min(S // self.page_size + 1, full_blocks))
+                page_row = self._host_bt[slot].copy()
             self.state = self._admit_fn(
                 self.state, pc, tok, jnp.int32(slot), jnp.int32(S),
                 jnp.int32(req.max_new_tokens - 1), jnp.int32(
                     -1 if req.eos_id is None else req.eos_id),
-                jnp.asarray(not done0))
+                jnp.asarray(not done0), jnp.asarray(page_row))
             if done0:
                 req.done = True
             else:
@@ -365,7 +584,8 @@ class CompiledServingEngine:
     # live weight publishing
     # ------------------------------------------------------------------
 
-    def publish(self, params, generation: Optional[int] = None) -> bool:
+    def publish(self, params,
+                generation: Optional[int] = None) -> Optional[bool]:
         """Queue ``params`` as the next weight generation and swap it in as
         soon as the inactive buffer is free of pinned in-flight requests
         (often immediately). In-flight requests keep decoding on their
@@ -375,18 +595,19 @@ class CompiledServingEngine:
         a deferred one applied, the older is superseded (counted in
         ``stats['publish_superseded']``). Returns True when the swap
         happened inside this call, False when deferred (it will apply
-        between decode calls once the old generation drains) or stale
-        (``generation`` not newer than what the engine already serves).
-        """
+        between decode calls once the old generation drains), and None
+        when REJECTED as stale (``generation`` not newer than what the
+        engine already serves or has queued) — so publishers can tell
+        "delivered" (True/False) from "dropped" (None)."""
         base = self._buf_gen[self._latest]
         if self._pending is not None:
             base = max(base, self._pending[0])     # don't collide with a
         gen = base + 1 if generation is None else int(generation)  # queued gen
         if gen <= self._buf_gen[self._latest]:
-            return False                          # stale republish
+            return None                           # stale republish
         if self._pending is not None:
             if gen <= self._pending[0]:
-                return False
+                return None
             self.stats["publish_superseded"] += 1
         self.stats["publishes"] += 1
         self._pending = (gen, params)
@@ -427,6 +648,13 @@ class CompiledServingEngine:
     def active(self) -> int:
         return sum(r is not None for r in self.slot_req)
 
+    def cache_bytes(self) -> int:
+        """Device-resident bytes of the whole cache tree (page pool +
+        dense leaves + scheduler vectors' cache) — what the paged/int8
+        concurrency benchmark holds fixed across layouts."""
+        return sum(int(l.nbytes)
+                   for l in jax.tree_util.tree_leaves(self.state.cache))
+
     def step(self) -> None:
         """One fused K-token decode call for all slots, then a single bulk
         host transfer and a host-side replay of the device stop rule.
@@ -437,6 +665,9 @@ class CompiledServingEngine:
         generation) runs exactly the pre-publishing program."""
         if self.active == 0:
             return
+        if self._paged:
+            self._ensure_pages()      # host alloc for the next K writes
+            self._push_block_tables()
         bufs = {self.slot_buf[i] for i, r in enumerate(self.slot_req)
                 if r is not None}
         if len(bufs) == 1:
@@ -445,8 +676,13 @@ class CompiledServingEngine:
         else:
             use_b = jnp.asarray(
                 [b == 1 for b in self.slot_buf])       # async, tiny, h->d
+            use_b_pages = np.zeros((max(self.n_pages, 1),), bool)
+            for i, r in enumerate(self.slot_req):
+                if r is not None and self.slot_buf[i] == 1:
+                    use_b_pages[self.slot_pages[i]] = True
             self.state, block = self._decode_dual_fn(
-                self._buffers[0], self._buffers[1], self.state, use_b)
+                self._buffers[0], self._buffers[1], self.state, use_b,
+                jnp.asarray(use_b_pages))
             self.stats["dual_decode_calls"] += 1
         self.stats["decode_calls"] += 1
         self.stats["decode_steps"] += self.decode_block
@@ -464,7 +700,7 @@ class CompiledServingEngine:
                         or (req.eos_id is not None and t == req.eos_id)
                         or pos_after >= self.max_seq - 1):
                     req.done = True
-                    self.slot_req[slot] = None
+                    self._release_slot(slot)      # pages return to the pool
                     break
         self._admit()
 
@@ -488,19 +724,19 @@ class CompiledServingEngine:
         program, so the first mid-flight publish pays no compile — pass it
         when the engine will receive live weight swaps."""
         dummy = jnp.zeros((1, self.buckets[0]), jnp.int32)
-        _, pc = self._prefill_fn(self.params, dummy, jnp.int32(1))
+        _, pc = self._run_prefill(self.buckets[0], dummy, 1)
         for b in self.buckets[1:]:
-            self._prefill_fn(self.params, jnp.zeros((1, b), jnp.int32),
-                             jnp.int32(1))
-        self.stats["prefill_compiles"] += len(self.buckets)
+            self._run_prefill(b, jnp.zeros((1, b), jnp.int32), 1)
         st = self._empty_state(jax.random.PRNGKey(0))
         st = self._admit_fn(st, pc, jnp.int32(0), jnp.int32(0),
                             jnp.int32(1), jnp.int32(0), jnp.int32(-1),
-                            jnp.asarray(False))
+                            jnp.asarray(False),
+                            jnp.zeros((self._n_blocks,), jnp.int32))
         st, _ = self._decode_fn(self.params, st)
         if dual:
             other = self._buffers[1 - self._latest]
             st, _ = self._decode_dual_fn(
                 self.params, other if other is not None else self.params,
-                st, jnp.zeros((self.max_batch,), bool))
+                st, jnp.zeros((self.max_batch,), bool),
+                jnp.zeros((max(self.n_pages, 1),), bool))
         jax.block_until_ready(st.tokens)

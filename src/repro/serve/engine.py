@@ -139,7 +139,12 @@ class ServingEngine:
                                           self.tokens, self.positions)
         next_tok = jnp.argmax(logits, -1).astype(jnp.int32)    # (B,)
         self.tokens = next_tok[:, None]
-        self.positions = self.positions + 1
+        # advance ACTIVE slots only (mirrors CompiledServingEngine._advance):
+        # free/finished slots must freeze, or an idle slot's position drifts
+        # without bound and its garbage writes clamp into row max_seq-1
+        active = jnp.asarray([r is not None for r in self.slot_req])
+        self.positions = jnp.where(active, self.positions + 1,
+                                   self.positions)
         for slot, req in enumerate(self.slot_req):
             if req is not None:
                 req.generated.append(int(next_tok[slot]))

@@ -92,16 +92,31 @@ class WeightPublisher:
     def publish(self, params, step: int = 0) -> int:
         """Publish ``params`` as the next generation: atomic snapshot
         first (so a crash mid-publish never leaves an engine ahead of the
-        durable record), then hot-swap into every attached engine."""
-        self.generation += 1
+        durable record), then hot-swap into every attached engine.
+
+        The generation counter and log only advance once the publish
+        actually lands somewhere: a ``save_publish`` failure propagates
+        without consuming a generation number, and if every attached
+        engine rejects the generation as stale (``publish`` -> None) the
+        counter rolls back too — otherwise a flaky snapshot dir or a
+        restarted publisher racing a fresher one would burn generations
+        and log publishes that never happened."""
+        gen = self.generation + 1
         if self.directory:
-            save_publish(self.directory, self.generation, step, params,
+            save_publish(self.directory, gen, step, params,
                          meta={"folds": self.average.n})
+        delivered = not self.engines
         for engine in self.engines:
-            engine.publish(params, generation=self.generation)
-        self.log.append({"generation": self.generation, "step": step,
+            # engines: True = swapped now, False = deferred (will apply),
+            # None = rejected as stale — only non-None counts as delivery
+            if engine.publish(params, generation=gen) is not None:
+                delivered = True
+        if not delivered:
+            return self.generation                # all engines rejected
+        self.generation = gen
+        self.log.append({"generation": gen, "step": step,
                          "folds": self.average.n})
-        return self.generation
+        return gen
 
 
 class PublishFollower:

@@ -127,7 +127,7 @@ def test_publish_superseded_and_stale():
     engine.step()                                 # pins buffer 0
     assert engine.publish(p1) is True             # gen 1 live in buffer 1
     assert engine.publish(p2) is False            # deferred (buffer 0 busy)
-    assert engine.publish(p1, generation=1) is False   # stale: already live
+    assert engine.publish(p1, generation=1) is None    # stale: rejected
     p3 = jax.tree_util.tree_map(lambda x: x * 2, p2)
     assert engine.publish(p3) is False            # deferred, supersedes p2
     assert engine.stats["publish_superseded"] == 1
@@ -200,6 +200,48 @@ def test_weight_publisher_every_skips_boundaries(tmp_path):
     assert pub.on_epoch(init_train_state({"params": w, "state": {}},
                                          opt_state={}, step=9), 9) == 1
     assert len(list_publishes(d)) == 1
+
+
+def test_publisher_rolls_back_generation_on_snapshot_failure(tmp_path):
+    """Regression: publish() advanced self.generation and appended to the
+    log even when save_publish raised — the durable record then lagged the
+    counter forever. A failed snapshot must propagate WITHOUT consuming a
+    generation number; the retry lands as the same generation."""
+    import repro.serve.publish as publish_mod
+    d = str(tmp_path)
+    w = {"k": jnp.ones((2,), jnp.float32)}
+    pub = WeightPublisher(directory=d, ensemble=False)
+
+    real = publish_mod.save_publish
+    publish_mod.save_publish = lambda *a, **k: (_ for _ in ()).throw(
+        OSError("disk full"))
+    try:
+        with pytest.raises(OSError):
+            pub.publish(w, step=5)
+    finally:
+        publish_mod.save_publish = real
+    assert pub.generation == 0 and pub.log == []
+    # the retry takes generation 1, not 2
+    assert pub.publish(w, step=5) == 1
+    assert [p["generation"] for p in list_publishes(d)] == [1]
+    assert pub.log[-1]["generation"] == 1
+
+
+def test_publisher_rolls_back_when_all_engines_reject_stale(tmp_path):
+    """Regression: if every attached engine rejected the generation as
+    stale (engine restarted ahead of the publisher, or two publishers
+    race), the publisher still advanced its counter and logged a publish
+    that never happened anywhere."""
+    cfg, model, (p0, p1, p2) = _setup("internlm2-1.8b")
+    engine = CompiledServingEngine(model, p0, max_batch=2, max_seq=64)
+    # engine is already serving generation 5 (restart / other publisher)
+    assert engine.publish(p1, generation=5) is True
+    pub = WeightPublisher([engine], ensemble=False)
+    assert pub.generation == 0
+    got = pub.publish(p2, step=9)          # queued as gen 1 -> stale
+    assert got == 0                        # counter NOT advanced
+    assert pub.log == []
+    assert engine.generation == 5          # engine untouched
 
 
 def test_publisher_engine_and_follower_roundtrip(tmp_path):

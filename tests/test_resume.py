@@ -181,3 +181,26 @@ def test_checkpointer_cadence_and_resume_priority(tmp_path):
     assert pt["meta"]["tag"] == "phase2"
 
     assert find_resume_point(str(tmp_path / "missing")) is None
+
+
+def test_checkpointer_resume_seeds_cadence_from_disk(tmp_path):
+    """Regression: a FRESH Checkpointer over an existing directory started
+    with an empty _last_saved map, so a resumed run re-snapshotted at its
+    very first epoch boundary regardless of the `every` cadence. The
+    cadence must seed from the snapshots already on disk, per tag."""
+    bundle = {"params": {"w": jnp.zeros((2, 2))}, "state": {}}
+    opt = {"mu": {"w": jnp.zeros((2, 2))}}
+
+    def at(step):
+        return init_train_state(bundle, opt, step=step)
+
+    ck = Checkpointer(str(tmp_path), every=4, keep=2)
+    assert ck.maybe_save("phase1", at(8)) is not None
+    assert ck.maybe_save("phase2", at(6)) is not None
+
+    resumed = Checkpointer(str(tmp_path), every=4, keep=2)
+    # step 10 is only 2 past phase1's durable step 8: off-cadence
+    assert resumed.maybe_save("phase1", at(10)) is None
+    # per-tag seeding: phase2 last saved at 6, so 10 is due
+    assert resumed.maybe_save("phase2", at(10)) is not None
+    assert resumed.maybe_save("phase1", at(12)) is not None

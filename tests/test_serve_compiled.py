@@ -263,11 +263,13 @@ def test_padded_prefill_exact_remaining_cache_families(arch):
 
 
 def test_decode_state_shardings_places_slots_on_data():
-    """The multi-host placement helper: cache leaves sharded on their
-    cache_batch_dim, slot vectors on the batch dim, rng replicated."""
+    """The multi-host placement helper: dense cache leaves sharded on
+    their cache_batch_dim, slot vectors (and block tables) on the batch
+    dim, rng replicated."""
     cfg, model, params = _setup("internlm2-1.8b")
     mesh = jax.make_mesh((8, 1), ("data", "model"))
-    engine = CompiledServingEngine(model, params, max_batch=8, max_seq=32)
+    engine = CompiledServingEngine(model, params, max_batch=8, max_seq=32,
+                                   kv_layout="dense")
     sh = decode_state_shardings(mesh, engine.state)
     P = jax.sharding.PartitionSpec
     assert sh.tokens.spec == P("data") and sh.remaining.spec == P("data")
@@ -279,6 +281,26 @@ def test_decode_state_shardings_places_slots_on_data():
     k_sh = jax.tree_util.tree_flatten(sh.cache["units"]["0"]["a"])[0][0]
     assert k.shape[1] == 8
     assert k_sh.spec == P(*([None, "data"] + [None] * (k.ndim - 2)))
+
+
+def test_decode_state_shardings_places_pages_on_data():
+    """Paged layout: pool leaves shard their PAGE dim (page_pool_dim) on
+    data — pages, not slots, are the unit of resident KV state — and the
+    block tables shard like every other per-slot vector."""
+    cfg, model, params = _setup("internlm2-1.8b")
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    engine = CompiledServingEngine(model, params, max_batch=8, max_seq=32,
+                                   kv_layout="paged", page_size=16,
+                                   n_pages=16)
+    assert engine.kv_layout == "paged"
+    sh = decode_state_shardings(mesh, engine.state)
+    P = jax.sharding.PartitionSpec
+    assert sh.block_tables.spec == P("data", None)
+    pool = engine.state.cache["units"]["0"]["p"]["k"]
+    pool_sh = jax.tree_util.tree_flatten(sh.cache["units"]["0"]["p"])[0][0]
+    # (n_units, n_pages, page_size, KVH, Dh): pages on data, rest local
+    assert pool.shape[1:3] == (16, 16)
+    assert pool_sh.spec == P(*([None, "data"] + [None] * (pool.ndim - 2)))
 
 
 def test_oversize_prompt_rejected_clearly():
@@ -297,3 +319,182 @@ def test_default_buckets_shape():
     assert default_buckets(256) == (16, 32, 64, 128, 256)
     assert default_buckets(96) == (16, 32, 64, 96)
     assert default_buckets(16) == (16,)
+
+
+# ---------------------------------------------------------------------------
+# prefill bucket capping (regression: silent per-length recompiles)
+# ---------------------------------------------------------------------------
+
+def test_capped_buckets_complete_to_max_seq_and_count_compiles():
+    """Custom buckets capped below max_seq used to fall back to
+    EXACT-LENGTH prefill for longer prompts — one silent compile per
+    distinct prompt length, never counted in stats['prefill_compiles'].
+    Construction must append max_seq to the bucket set, and every
+    post-warmup prefill compile must be counted."""
+    cfg, model, params = _setup("internlm2-1.8b")
+    engine = CompiledServingEngine(model, params, max_batch=1, max_seq=32,
+                                   decode_block=2, prefill_buckets=(8,))
+    assert engine.buckets == (8, 32)
+    for L in (5, 9, 11, 13):           # 3 distinct lengths above bucket 8
+        engine.run([Request(rid=L, prompt=_prompts(cfg, [L], seed=L)[0],
+                            max_new_tokens=2)])
+    # 2 bucket programs total — NOT 1 + one per distinct long length
+    assert engine.stats["prefill_compiles"] == 2
+    # buckets beyond max_seq are dropped, not compiled
+    e2 = CompiledServingEngine(model, params, max_batch=1, max_seq=32,
+                               prefill_buckets=(8, 64, 128))
+    assert e2.buckets == (8, 32)
+
+
+def test_warmup_counts_each_bucket_once():
+    cfg, model, params = _setup("internlm2-1.8b")
+    engine = CompiledServingEngine(model, params, max_batch=1, max_seq=32,
+                                   decode_block=2, prefill_buckets=(8, 16))
+    engine.warmup()
+    assert engine.stats["prefill_compiles"] == len(engine.buckets) == 3
+    engine.run([Request(rid=0, prompt=_prompts(cfg, [9], seed=2)[0],
+                        max_new_tokens=2)])
+    # serving reuses warmed buckets: no new compiles counted
+    assert engine.stats["prefill_compiles"] == 3
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache
+# ---------------------------------------------------------------------------
+
+def test_kv_layout_auto_resolution():
+    """auto -> paged iff the model has pageable (full-attention GQA)
+    layers; explicitly requesting paged on a pool-less model is an error,
+    not a silent dense fallback."""
+    _, attn_model, attn_params = _setup("internlm2-1.8b")
+    _, ssm_model, ssm_params = _setup("mamba2-2.7b")
+    e = CompiledServingEngine(attn_model, attn_params, max_seq=32)
+    assert e.kv_layout == "paged" and e.state.block_tables.shape == (4, 2)
+    e = CompiledServingEngine(ssm_model, ssm_params, max_seq=32)
+    assert e.kv_layout == "dense" and e.state.block_tables.shape == (4, 0)
+    with pytest.raises(ValueError, match="pageable"):
+        CompiledServingEngine(ssm_model, ssm_params, max_seq=32,
+                              kv_layout="paged")
+
+
+def _run_engine(model, params, reqs, **kw):
+    engine = CompiledServingEngine(model, params, **kw)
+    out = engine.run(reqs)
+    return out, engine
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "gemma3-1b",
+                                  "zamba2-7b"])
+def test_paged_matches_dense_across_cache_families(arch):
+    """Tentpole exactness: the paged engine's tokens are identical to the
+    dense engine's on every pageable family — pure GQA, mixed
+    sliding-window + global (only globals paged), and hybrid shared-attn
+    over mamba (only the shared block paged)."""
+    cfg, model, params = _setup(arch)
+    lengths = [9, 17, 5, 12, 8]
+    mk = lambda: [Request(rid=i, prompt=p, max_new_tokens=6)  # noqa: E731
+                  for i, p in enumerate(_prompts(cfg, lengths))]
+    dense, _ = _run_engine(model, params, mk(), max_batch=2, max_seq=64,
+                           decode_block=4, kv_layout="dense")
+    paged, ep = _run_engine(model, params, mk(), max_batch=2, max_seq=64,
+                            decode_block=4, kv_layout="paged", page_size=16)
+    assert paged == dense
+    assert ep.stats["decode_transfers"] == ep.stats["decode_calls"]
+
+
+def test_paged_staggered_eos_and_slot_reuse_match_oracle():
+    """Paged vs the per-step oracle under the adversarial schedule: late
+    arrivals into reused (dirty) slots, a mid-block EOS, budgets of
+    different sizes — all with page recycling in between."""
+    cfg, model, params = _setup("internlm2-1.8b")
+    prompts = _prompts(cfg, [9, 6, 11, 7, 5], seed=3)
+    ref0 = _reference_tokens(model, params, prompts[2], 3)
+    eos = ref0[2]                    # fires mid-decode for request 2
+    mk = lambda: [  # noqa: E731
+        Request(rid=0, prompt=prompts[0], max_new_tokens=8),
+        Request(rid=1, prompt=prompts[1], max_new_tokens=3),
+        Request(rid=2, prompt=prompts[2], max_new_tokens=9, eos_id=eos),
+        Request(rid=3, prompt=prompts[3], max_new_tokens=7),
+        Request(rid=4, prompt=prompts[4], max_new_tokens=5)]
+
+    oracle = ServingEngine(model, params, max_batch=2, max_seq=64)
+    want = oracle.run(mk())
+    engine = CompiledServingEngine(model, params, max_batch=2, max_seq=64,
+                                   decode_block=3, kv_layout="paged",
+                                   page_size=16)
+    reqs = mk()
+    engine.submit(reqs[0])
+    engine.submit(reqs[1])
+    engine.step()
+    for r in reqs[2:]:
+        engine.submit(r)
+        engine.step()
+    steps = 0
+    while (engine.active or engine.waiting) and steps < 100:
+        engine.step()
+        steps += 1
+    for r in reqs:
+        assert r.generated == want[r.rid], r.rid
+    # every page returned to the pool once the workload drained
+    assert len(engine._free_pages) == engine.n_pages - 1
+    assert not any(engine.slot_pages)
+    assert not engine._host_bt.any()
+
+
+def test_paged_int8_token_exact_trio():
+    """kv_cache_dtype='int8' on the paged pool: paged-int8, dense-int8
+    and the int8 per-step oracle all emit identical greedy tokens (same
+    per-(token, head) quantization everywhere — layout changes nothing)."""
+    import dataclasses
+    cfg, model, params = _setup("internlm2-1.8b")
+    lengths = [9, 14, 6]
+    mk = lambda: [Request(rid=i, prompt=p, max_new_tokens=6)  # noqa: E731
+                  for i, p in enumerate(_prompts(cfg, lengths, seed=21))]
+    paged, ep = _run_engine(model, params, mk(), max_batch=2, max_seq=64,
+                            decode_block=4, kv_layout="paged",
+                            kv_cache_dtype="int8")
+    dense, ed = _run_engine(model, params, mk(), max_batch=2, max_seq=64,
+                            decode_block=4, kv_layout="dense",
+                            kv_cache_dtype="int8")
+    int8_model = Model(dataclasses.replace(cfg, kv_cache_dtype="int8"))
+    oracle = ServingEngine(int8_model, params, max_batch=2, max_seq=64)
+    want = oracle.run(mk())
+    assert paged == dense == want
+    # the int8 pool is the footprint win at equal token capacity vs the
+    # f32 dense layout it replaces (int8 values + f32 per-token scales)
+    f32 = CompiledServingEngine(model, params, max_batch=2, max_seq=64,
+                                kv_layout="dense")
+    assert ep.cache_bytes() < f32.cache_bytes()
+    assert ep.stats["decode_transfers"] == ep.stats["decode_calls"]
+
+
+def test_paged_small_pool_defers_admission_not_correctness():
+    """A pool far smaller than slots x max_seq forces head-of-line page
+    waits; tokens must still be exact and the reservation invariant means
+    mid-decode growth never exhausts the pool."""
+    cfg, model, params = _setup("internlm2-1.8b")
+    lengths = [9, 17, 5, 12, 8]
+    mk = lambda: [Request(rid=i, prompt=p, max_new_tokens=6)  # noqa: E731
+                  for i, p in enumerate(_prompts(cfg, lengths))]
+    dense, _ = _run_engine(model, params, mk(), max_batch=2, max_seq=64,
+                           decode_block=4, kv_layout="dense")
+    # 2 allocatable pages of 16 tokens vs 2 slots x 64: the 17-token
+    # prompt reserves both pages, so a second request must wait
+    tiny, et = _run_engine(model, params, mk(), max_batch=2, max_seq=64,
+                           decode_block=4, kv_layout="paged", page_size=16,
+                           n_pages=3)
+    assert tiny == dense
+    assert et.stats["admit_page_waits"] > 0
+    assert len(et._free_pages) == et.n_pages - 1
+
+
+def test_paged_rejects_unfittable_request():
+    """A request whose worst case exceeds the whole pool can never admit:
+    submit() must fail loudly instead of deadlocking the queue."""
+    cfg, model, params = _setup("internlm2-1.8b")
+    engine = CompiledServingEngine(model, params, max_batch=2, max_seq=64,
+                                   kv_layout="paged", page_size=16,
+                                   n_pages=3)
+    with pytest.raises(ValueError, match="pages"):
+        engine.submit(Request(rid=0, prompt=_prompts(cfg, [17])[0],
+                              max_new_tokens=40))

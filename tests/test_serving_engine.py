@@ -96,3 +96,35 @@ def test_eos_stops_early():
     engine.run([req])
     assert req.generated[-1] == ref[1]
     assert len(req.generated) <= 3
+
+
+def test_idle_slot_positions_freeze():
+    """Regression: step() advanced positions for EVERY slot, so an idle
+    slot's position drifted without bound while another slot decoded —
+    its garbage writes clamp into cache row max_seq-1, and a later
+    admission near the truncation boundary inherited a poisoned row.
+    Positions must freeze for slots with no request (mirroring the
+    compiled engine's _advance)."""
+    cfg, model, params = _setup("internlm2-1.8b")
+    max_seq = 16
+    engine = ServingEngine(model, params, max_batch=2, max_seq=max_seq)
+    key = jax.random.PRNGKey(3)
+    p_long = jax.random.randint(key, (6,), 0, cfg.vocab_size,
+                                dtype=jnp.int32)
+    long_req = Request(rid=0, prompt=p_long, max_new_tokens=max_seq)
+    engine.submit(long_req)
+    # slot 1 idles the whole time slot 0 decodes toward max_seq-1; with
+    # the drift bug its position passes max_seq-1 within these steps
+    while not long_req.done:
+        engine.step()
+        assert int(engine.positions[1]) == 0, \
+            "idle slot position drifted while another slot decoded"
+    # a fresh request admitted into the idle slot must be token-exact
+    # right up against the truncation boundary (row max_seq-1 clean)
+    p2 = jax.random.randint(jax.random.fold_in(key, 1), (6,), 0,
+                            cfg.vocab_size, dtype=jnp.int32)
+    late = Request(rid=1, prompt=p2, max_new_tokens=max_seq)
+    engine.run([late])
+    # truncation allows exactly max_seq - S tokens (stop at row max_seq-1)
+    want = _reference_tokens(model, params, p2, max_seq - 6)
+    assert late.generated == want
