@@ -1,0 +1,259 @@
+"""Kernel design-point sweep driver: the autotuner behind tuning_cache.json.
+
+Enumerates design points (block_q/block_k/num_warps/num_stages per kernel)
+over shape buckets, times each with the shared steady-state helper
+(benchmarks.common.time_kernel), scores achieved time against the
+benchmarks.roofline analytical bound, and — with ``--update-cache`` —
+persists each bucket's winner into ``src/repro/kernels/tuning_cache.json``
+under the ``backend/kernel/bucket`` key that ``dispatch.resolve`` consults.
+
+Modes:
+  --smoke   CI mode: 2 design points per kernel, tiny shapes, the forced
+            native-variant kernel under the Pallas interpreter on CPU.
+            Exists to exercise the sweep machinery + tracked floors every
+            push, not to produce meaningful tunings.
+  (default) full sweep on the live backend (run on a real GPU/TPU host,
+            then commit the refreshed cache).
+
+Tracked metrics (BENCH_kernels.json contract, enforced by
+check_regression.py in CI):
+  {kernel}_best_vs_default   default-design time / best time. >= 1.0 by
+                             construction (the default is always in the
+                             candidate set), so the floor pins the sweep
+                             machinery, not runner speed.
+  {kernel}_roofline_fraction roofline bound / best time (fraction of
+                             analytical peak achieved). Floor 0.0 —
+                             recorded for trajectory, meaningless under
+                             the CPU interpreter.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+# runnable both as `python benchmarks/bench_kernels.py` (CI) and as a module
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import time_kernel
+from benchmarks.roofline import kernel_bound_s
+from repro.kernels import dispatch, tuning
+from repro.kernels.tuning import DEFAULT_DESIGN, DesignPoint
+
+# ---------------------------------------------------------------------------
+# design-point candidate spaces (the default design MUST stay first:
+# best_vs_default >= 1.0 relies on it being in the swept set)
+# ---------------------------------------------------------------------------
+
+FULL_SPACE = {
+    "flash_attention": [DEFAULT_DESIGN["flash_attention"]] + [
+        DesignPoint(bq, bk, w, st)
+        for bq in (64, 128) for bk in (64, 128)
+        for w in (4, 8) for st in (2, 3)
+        if (bq, bk, w, st) != (128, 128, 4, 2)
+    ],
+    "ssd": [DEFAULT_DESIGN["ssd"]] + [
+        DesignPoint(0, 0, w, st)
+        for w in (2, 4, 8) for st in (1, 2, 3)
+        if (w, st) != (4, 2)
+    ],
+    "swa_avg": [DEFAULT_DESIGN["swa_avg"]] + [
+        DesignPoint(bq, 0, w, 2)
+        for bq in (4096, 8192, 16384, 32768) for w in (4, 8)
+        if (bq, w) != (8192, 4)
+    ],
+}
+
+SMOKE_SPACE = {
+    "flash_attention": [DEFAULT_DESIGN["flash_attention"],
+                        DesignPoint(32, 32, 8, 2)],
+    "ssd": [DEFAULT_DESIGN["ssd"], DesignPoint(0, 0, 8, 1)],
+    "swa_avg": [DEFAULT_DESIGN["swa_avg"],
+                DesignPoint(16384, 0, 8, 2)],
+}
+
+# (shape kwargs for roofline.kernel_model) per mode
+SMOKE_SHAPES = {
+    "flash_attention": dict(b=1, sq=64, skv=64, h=4, kvh=2, d=16),
+    "ssd": dict(b=1, s=64, h=2, p=16, n=16, chunk=32),
+    "swa_avg": dict(numel=65536),
+}
+FULL_SHAPES = {
+    "flash_attention": dict(b=4, sq=2048, skv=2048, h=16, kvh=4, d=128),
+    "ssd": dict(b=4, s=2048, h=16, p=64, n=128, chunk=128),
+    "swa_avg": dict(numel=50_000_000),
+}
+
+
+def _bucket_shape(kernel: str, s: dict):
+    """The tuning.shape_bucket tuple for a bench shape."""
+    if kernel == "flash_attention":
+        return (s["skv"], s["d"])
+    if kernel == "ssd":
+        return (s["s"], s["p"])
+    return (s["numel"],)
+
+
+# ---------------------------------------------------------------------------
+# per-kernel timed calls (forced native variant; interpreter off-GPU)
+# ---------------------------------------------------------------------------
+
+
+def _flash_fn(s, design, variant, interpret):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (s["b"], s["sq"], s["h"], s["d"]))
+    k = jax.random.normal(key, (s["b"], s["skv"], s["kvh"], s["d"]))
+    v = jax.random.normal(key, (s["b"], s["skv"], s["kvh"], s["d"]))
+    if variant == "triton":
+        from repro.kernels.flash_attention.kernel_gpu import (
+            flash_attention_triton)
+        fn = lambda q, k, v: flash_attention_triton(
+            q, k, v, design=design, interpret=interpret)
+    else:
+        from repro.kernels.flash_attention.kernel import (
+            flash_attention_pallas)
+        bq = design.block_q or 128
+        bk = design.block_k or 128
+        fn = lambda q, k, v: flash_attention_pallas(
+            q, k, v, block_q=bq, block_k=bk, interpret=interpret)
+    return fn, (q, k, v)
+
+
+def _ssd_fn(s, design, variant, interpret):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (s["b"], s["s"], s["h"], s["p"]))
+    dt = jax.nn.softplus(jax.random.normal(key, (s["b"], s["s"], s["h"])))
+    A = -jnp.abs(jax.random.normal(key, (s["h"],)))
+    Bm = jax.random.normal(key, (s["b"], s["s"], 1, s["n"]))
+    Cm = jax.random.normal(key, (s["b"], s["s"], 1, s["n"]))
+    if variant == "triton":
+        from repro.kernels.ssd.kernel_gpu import ssd_chunk_triton
+        fn = lambda *a: ssd_chunk_triton(*a, chunk=s["chunk"],
+                                         design=design,
+                                         interpret=interpret)
+    else:
+        from repro.kernels.ssd.kernel import ssd_chunk_pallas
+        fn = lambda *a: ssd_chunk_pallas(*a, chunk=s["chunk"],
+                                         interpret=interpret)
+    return fn, (x, dt, A, Bm, Cm)
+
+
+def _swa_fn(s, design, variant, interpret):
+    key = jax.random.PRNGKey(0)
+    avg = jax.random.normal(key, (s["numel"],))
+    w = jax.random.normal(jax.random.PRNGKey(1), (s["numel"],))
+    n = jnp.float32(3.0)
+    if variant == "triton":
+        from repro.kernels.swa_avg.kernel_gpu import running_average_triton
+        fn = lambda a, b, n: running_average_triton(
+            a, b, n, design=design, interpret=interpret)
+    else:
+        from repro.kernels.swa_avg.kernel import running_average_pallas
+        fn = lambda a, b, n: running_average_pallas(a, b, n,
+                                                    interpret=interpret)
+    return fn, (avg, w, n)
+
+
+_BENCH_FNS = {"flash_attention": _flash_fn, "ssd": _ssd_fn,
+              "swa_avg": _swa_fn}
+
+
+def sweep_kernel(kernel: str, shapes: dict, space: list, backend: str,
+                 variant: str, interpret: bool, iters: int) -> dict:
+    s = shapes[kernel]
+    bound = kernel_bound_s(kernel, backend, **s)
+    results = []
+    for dp in space:
+        fn, args = _BENCH_FNS[kernel](s, dp, variant, interpret)
+        t = time_kernel(fn, *args, iters=iters)
+        results.append({"design": dp.astuple(), "time_us": t * 1e6,
+                        "roofline_fraction": bound / t})
+        if t < bound:
+            print(f"  WARNING: {kernel} {dp.astuple()} measured "
+                  f"{t*1e6:.1f}us beats the roofline bound "
+                  f"{bound*1e6:.1f}us — model or timer is wrong")
+    best = min(results, key=lambda r: r["time_us"])
+    default_t = results[0]["time_us"]   # default design is always first
+    return {
+        "shape": s, "bucket": tuning.shape_bucket(
+            kernel, _bucket_shape(kernel, s)),
+        "roofline_bound_us": bound * 1e6,
+        "results": results,
+        "best_design": best["design"],
+        "best_time_us": best["time_us"],
+        "default_time_us": default_t,
+        "best_vs_default": default_t / best["time_us"],
+        "roofline_fraction": best["roofline_fraction"],
+    }
+
+
+def run(smoke: bool = False, iters: int = 5, update_cache: bool = False,
+        out: str | None = None, verbose: bool = True) -> dict:
+    backend = dispatch.current_backend()
+    # sweep the backend's native lowering; on CPU (smoke/CI) exercise the
+    # Triton programs under the interpreter — the GPU path is the one with
+    # a design-point space worth sweeping
+    variant = {"tpu": "mosaic"}.get(backend, "triton")
+    interpret = backend == "cpu" or (
+        variant == "triton" and backend != "gpu")
+    space = SMOKE_SPACE if smoke else FULL_SPACE
+    shapes = SMOKE_SHAPES if smoke else FULL_SHAPES
+
+    report = {"backend": backend, "variant": variant,
+              "interpret": interpret,
+              "mode": "smoke" if smoke else "full", "kernels": {},
+              "tracked": {}}
+    winners = {}
+    for kernel in tuning.KERNELS:
+        if verbose:
+            print(f"== {kernel} ({variant}, interpret={interpret}, "
+                  f"{len(space[kernel])} design points) ==")
+        r = sweep_kernel(kernel, shapes, space[kernel], backend, variant,
+                         interpret, iters)
+        report["kernels"][kernel] = r
+        winners[f"{backend}/{kernel}/{r['bucket']}"] = DesignPoint(
+            *r["best_design"])
+        report["tracked"][f"{kernel}_best_vs_default"] = {
+            "value": round(r["best_vs_default"], 4), "floor": 1.0}
+        report["tracked"][f"{kernel}_roofline_fraction"] = {
+            "value": round(r["roofline_fraction"], 6), "floor": 0.0}
+        if verbose:
+            for res in r["results"]:
+                print(f"  {str(res['design']):22s} "
+                      f"{res['time_us']:10.1f}us  "
+                      f"{res['roofline_fraction']:8.5f} of roofline")
+            print(f"  best {r['best_design']} "
+                  f"({r['best_vs_default']:.3f}x default)")
+
+    if update_cache:
+        path = tuning.update_entries(winners)
+        print(f"tuning cache updated: {path} "
+              f"({len(winners)} {backend} entries)")
+    if out:
+        with open(out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {out}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: 2 design points per kernel, tiny "
+                         "shapes, interpret-mode on CPU")
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--update-cache", action="store_true",
+                    help="persist per-bucket winners into "
+                         "src/repro/kernels/tuning_cache.json")
+    ap.add_argument("--out", help="write the sweep report JSON here")
+    args = ap.parse_args()
+    run(smoke=args.smoke, iters=args.iters, update_cache=args.update_cache,
+        out=args.out)
+
+
+if __name__ == "__main__":
+    main()

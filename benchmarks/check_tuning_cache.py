@@ -1,0 +1,53 @@
+"""Schema-check the persisted kernel tuning cache (CI lint job).
+
+Loads ``src/repro/kernels/tuning.py`` directly by file path — NOT via the
+``repro.kernels`` package, whose ``__init__`` imports JAX — so this check
+runs on the lint host, which installs only ruff. Validates that every
+entry in ``tuning_cache.json`` parses and its key matches the
+``backend/kernel/bucket`` format (tuning.validate_cache).
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TUNING_PY = os.path.join(REPO, "src", "repro", "kernels", "tuning.py")
+
+
+def load_tuning_module():
+    spec = importlib.util.spec_from_file_location("_repro_tuning", TUNING_PY)
+    mod = importlib.util.module_from_spec(spec)
+    # dataclasses resolves annotations via sys.modules[cls.__module__]
+    sys.modules["_repro_tuning"] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def main() -> int:
+    tuning = load_tuning_module()
+    path = tuning.CACHE_PATH
+    if not os.path.exists(path):
+        print(f"FAIL: tuning cache missing at {path} — regenerate with "
+              f"benchmarks/bench_kernels.py --update-cache", file=sys.stderr)
+        return 1
+    with open(path) as f:
+        try:
+            data = json.load(f)
+        except json.JSONDecodeError as e:
+            print(f"FAIL: {path} is not valid JSON: {e}", file=sys.stderr)
+            return 1
+    errs = tuning.validate_cache(data)
+    if errs:
+        for e in errs:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    n = len(data.get("entries", {}))
+    print(f"tuning cache OK: {n} entries at {os.path.relpath(path, REPO)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

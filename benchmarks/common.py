@@ -118,6 +118,25 @@ def run_swa(adapter, train, test_loader, *, start_bundle, n_samples: int,
 
 
 # ---------------------------------------------------------------------------
+# kernel timing
+# ---------------------------------------------------------------------------
+
+
+def time_kernel(fn, *args, iters: int = 5, warmup: int = 1) -> float:
+    """Steady-state seconds per call: ``warmup`` untimed calls (compile +
+    cache warm), then the mean of ``iters`` block-until-ready timed calls.
+    The one shared timing helper for microbench.py and bench_kernels.py —
+    keep warmup/steady-state policy changes here."""
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+# ---------------------------------------------------------------------------
 # reporting
 # ---------------------------------------------------------------------------
 

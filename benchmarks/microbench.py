@@ -2,25 +2,17 @@
 Emits ``name,us_per_call,derived`` CSV rows."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, time_kernel
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.ssd.ops import ssd_scan
 from repro.kernels.swa_avg.ops import running_average
 
 
 def _time(fn, *args, iters=5):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+    return time_kernel(fn, *args, iters=iters) * 1e6
 
 
 def run(verbose=True):

@@ -1,12 +1,79 @@
-"""Roofline report: renders the per-(arch x shape x mesh) table from the
-dry-run JSON (see EXPERIMENTS.md §Roofline). No computation here — the
-numbers come from compiled artifacts."""
+"""Roofline models + report.
+
+Two layers:
+  * the per-(arch x shape x mesh) table rendered from the dry-run JSON
+    (see EXPERIMENTS.md §Roofline) — no computation, numbers come from
+    compiled artifacts;
+  * per-kernel analytical bytes/FLOPs models (``kernel_model``) used by
+    ``bench_kernels.py`` to score each measured design point against the
+    backend's roofline bound (``kernel_bound_s``) — the sanity check that
+    makes sweep output interpretable (a "winner" at 1% of roofline is a
+    scheduling artifact, not a good tile).
+"""
 from __future__ import annotations
 
 import json
 import os
 
 HW = "TPU v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link ICI"
+
+# peak (flops/s, bytes/s) per backend for the kernel roofline bound.
+# tpu: v5e bf16 MXU + HBM (the HW line above); gpu: A100-40GB-class f32
+# tensor-core-free peak + HBM2e; cpu: one AVX-512 server core-ish — only
+# used so smoke-mode fractions are finite, never as a promise.
+KERNEL_HW = {
+    "tpu": {"flops": 197e12, "bytes": 819e9},
+    "gpu": {"flops": 19.5e12, "bytes": 1.55e12},
+    "cpu": {"flops": 5e10, "bytes": 2e10},
+}
+
+_DTYPE_BYTES = 4   # kernels accumulate f32; benches feed f32 operands
+
+
+def kernel_model(kernel: str, **s) -> dict:
+    """Analytical {flops, bytes} for one forward call of a kernel.
+
+    Shape kwargs per kernel:
+      flash_attention: b, sq, skv, h, kvh, d
+      ssd:             b, s, h, p, n, chunk   (intra-chunk kernel only)
+      swa_avg:         numel
+    """
+    e = _DTYPE_BYTES
+    if kernel == "flash_attention":
+        b, sq, skv, h, d = s["b"], s["sq"], s["skv"], s["h"], s["d"]
+        kvh = s.get("kvh", h)
+        # QK^T and PV, 2*M*N*K each; softmax/elementwise folded into bytes
+        flops = 2 * (2 * b * sq * skv * h * d)
+        bytes_ = e * (2 * b * sq * h * d          # q read, out write
+                      + 2 * b * skv * kvh * d     # k, v read
+                      + b * sq * h)               # lse write
+        return {"flops": flops, "bytes": bytes_}
+    if kernel == "ssd":
+        b, sl, h, p, n = s["b"], s["s"], s["h"], s["p"], s["n"]
+        L = s["chunk"]
+        nc = sl // L
+        # per (b*h, chunk) program: scores (L,N)x(N,L), y (L,L)x(L,P),
+        # state (P,L)x(L,N)
+        flops = b * h * nc * 2 * (L * L * n + L * L * p + L * p * n)
+        bytes_ = e * b * h * (sl * p * 2          # x read, y write
+                              + sl * 2            # dt read, cum write
+                              + sl * n * 2        # B, C read
+                              + nc * p * n)       # states write
+        return {"flops": flops, "bytes": bytes_}
+    if kernel == "swa_avg":
+        numel = s["numel"]
+        return {"flops": 3 * numel,               # sub, div, add
+                "bytes": e * 3 * numel}           # avg + w read, out write
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def kernel_bound_s(kernel: str, backend: str, **shape) -> float:
+    """Roofline lower bound (seconds) for one call on ``backend``: the
+    slower of the compute and memory terms. Measured time below this bound
+    means the model (or the timer) is wrong — bench_kernels warns."""
+    hw = KERNEL_HW[backend]
+    m = kernel_model(kernel, **shape)
+    return max(m["flops"] / hw["flops"], m["bytes"] / hw["bytes"])
 
 
 def fmt_s(x):

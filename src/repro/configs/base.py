@@ -105,11 +105,16 @@ class ModelConfig:
     param_dtype: str = "float32"
 
     # implementation switches, resolved per backend by
-    # repro.kernels.dispatch: "auto" picks the compiled Pallas kernel on
-    # TPU and the blockwise pure-jnp reference elsewhere; "pallas" /
-    # "reference" / "naive" force a path (pallas off-TPU = interpreter).
-    attention_impl: str = "auto"   # "auto" | "reference" | "pallas" | "naive"
-    ssd_impl: str = "auto"         # "auto" | "reference" | "pallas" | "naive"
+    # repro.kernels.dispatch (see its table): "auto" picks the compiled
+    # native kernel per backend (Mosaic on TPU, Triton on GPU, reference on
+    # CPU); "pallas"/"mosaic"/"triton"/"reference"/"naive" force a path
+    # (a forced lowering off its native backend runs interpreted).
+    attention_impl: str = "auto"   # one of dispatch.KERNEL_IMPLS
+    ssd_impl: str = "auto"         # one of dispatch.KERNEL_IMPLS
+    # optional pinned tuning design points, (block_q, block_k, num_warps,
+    # num_stages); () = consult the persisted tuning cache (the default).
+    attention_design: Tuple[int, ...] = ()
+    ssd_design: Tuple[int, ...] = ()
     attention_chunk: int = 512          # kv block for blockwise reference attn
     remat: bool = True                  # checkpoint each layer in train_step
     # remat policy: "full" recomputes everything; "dots" saves matmul
@@ -136,6 +141,18 @@ class ModelConfig:
             raise ValueError(f"unknown family {self.family!r}")
         if self.head_dim == 0 and self.n_heads > 0:
             object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        # validate impl strings HERE, not at resolve time deep inside a
+        # jitted trace (function-local import: this module stays jax-free
+        # at import time for config-only tooling)
+        from repro.kernels.dispatch import validate_impl
+        validate_impl(self.attention_impl, "ModelConfig.attention_impl")
+        validate_impl(self.ssd_impl, "ModelConfig.ssd_impl")
+        for fld in ("attention_design", "ssd_design"):
+            pin = getattr(self, fld)
+            if pin and len(pin) != 4:
+                raise ValueError(
+                    f"ModelConfig.{fld} must be () or a 4-tuple (block_q, "
+                    f"block_k, num_warps, num_stages); got {pin!r}")
 
     @property
     def d_head_q(self) -> int:

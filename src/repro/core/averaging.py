@@ -17,6 +17,7 @@ from typing import Callable, Iterable
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.swa_avg import running_average_tree
 
 
@@ -35,11 +36,12 @@ class StreamingAverage:
     """Numerically-stable running mean of parameter pytrees.
 
     ``impl`` follows repro.kernels.dispatch: "auto" (default) resolves to
-    the fused swa_avg Pallas kernel on TPU and the jnp reference
-    elsewhere; "pallas" forces the kernel (interpreter off-TPU)."""
+    the fused swa_avg kernel on accelerators (Mosaic on TPU, Triton on
+    GPU) and the jnp reference on CPU; "pallas"/"mosaic"/"triton" force a
+    lowering (interpreter off its native backend)."""
 
     def __init__(self, impl: str = "auto"):
-        self.impl = impl
+        self.impl = dispatch.validate_impl(impl, "StreamingAverage.impl")
         self.n = 0
         self.avg = None
 

@@ -4,21 +4,35 @@ Before this module, every kernel wrapper hardcoded ``interpret=True`` and
 every call site pinned ``impl="reference"`` — correct on the CPU CI host,
 but the serving/training hot paths would run interpreter-speed Pallas (or
 skip the kernels entirely) on real hardware. ``resolve`` centralizes the
-choice:
+choice. Each kernel package now carries TWO compiled lowerings — the
+Mosaic-TPU program (``kernel.py``: pltpu VMEM BlockSpecs/scratch, grid-
+carried accumulators) and the Triton-lowered GPU program (``kernel_gpu.py``:
+squeezed GPU BlockSpecs, in-kernel ``fori_loop`` reductions,
+``num_warps``/``num_stages`` compiler params) — so "auto" means a compiled
+kernel on both accelerator backends:
 
-  requested      backend    -> impl        interpret
-  -----------------------------------------------------
-  "auto"         tpu        -> "pallas"    False  (compiled kernel)
-  "auto"         gpu / cpu  -> "reference" —      (blockwise jnp path)
-  "pallas"       tpu        -> "pallas"    False
-  "pallas"       gpu / cpu  -> "pallas"    True   (interpreter; tests)
-  "reference"    any        -> "reference" —
-  "naive"        any        -> "naive"     —      (oracle; tests only)
+  requested      backend    -> impl        variant    interpret
+  ----------------------------------------------------------------
+  "auto"         tpu        -> "pallas"    "mosaic"   False (compiled)
+  "auto"         gpu        -> "pallas"    "triton"   False (compiled)
+  "auto"         cpu        -> "reference" —          —     (jnp path)
+  "pallas"       tpu        -> "pallas"    "mosaic"   False
+  "pallas"       gpu        -> "pallas"    "triton"   False
+  "pallas"       cpu        -> "pallas"    "mosaic"   True  (interpreter)
+  "mosaic"       any        -> "pallas"    "mosaic"   backend != tpu
+  "triton"       any        -> "pallas"    "triton"   backend != gpu
+  "reference"    any        -> "reference" —          —
+  "naive"        any        -> "naive"     —          —     (oracle; tests)
 
-The repo's kernels are Mosaic-TPU Pallas (pltpu VMEM BlockSpecs/scratch),
-so only TPU gets the compiled path; on GPU "auto" stays on the jnp
-reference (which XLA fuses well) rather than attempting a TPU-only
-lowering. A Triton port would flip that policy here, in one place.
+"mosaic"/"triton" force a specific lowering (interpreter when the live
+backend cannot compile it) — this is how CPU CI equivalence-tests the GPU
+variants. When the resolved impl is "pallas", ``resolve`` also consults the
+persisted tuning cache (``repro.kernels.tuning``, keyed by backend x kernel
+x shape bucket) and carries the winning design point — block sizes,
+``num_warps``, ``num_stages`` — into the dispatch; a miss falls back to the
+kernel's deterministic ``DEFAULT_DESIGN`` so untuned shapes degrade
+gracefully. ``benchmarks/bench_kernels.py`` regenerates the cache. See
+docs/kernels.md for the full table, design-point spaces, and cache schema.
 
 Call sites (models/attention.py, models/mamba2.py, core/averaging.py) pass
 the *requested* impl straight from their config (default ``"auto"``); the
@@ -33,16 +47,23 @@ from typing import Optional
 
 import jax
 
-KERNEL_IMPLS = ("auto", "pallas", "reference", "naive")
+from repro.kernels import tuning
+from repro.kernels.tuning import DesignPoint  # noqa: F401  (re-export)
+
+KERNEL_IMPLS = ("auto", "pallas", "mosaic", "triton", "reference", "naive")
 
 
 @dataclasses.dataclass(frozen=True)
 class KernelDispatch:
-    """A resolved kernel choice: concrete impl + Pallas interpret flag."""
+    """A resolved kernel choice: concrete impl + lowering variant +
+    Pallas interpret flag + tuned design point."""
 
     impl: str           # "pallas" | "reference" | "naive"
     interpret: bool     # only meaningful when impl == "pallas"
     backend: str        # backend the decision was made for
+    variant: Optional[str] = None    # "mosaic" | "triton" when impl=="pallas"
+    design: Optional[DesignPoint] = None  # tuned/pinned point (pallas only)
+    cache_hit: bool = False          # design came from the tuning cache
 
 
 def current_backend() -> str:
@@ -50,24 +71,63 @@ def current_backend() -> str:
     return jax.default_backend()
 
 
+def validate_impl(requested: str, where: str = "impl") -> str:
+    """Raise a clear ValueError (listing KERNEL_IMPLS) for a typo'd impl
+    string — at config-construction time, not deep inside a jitted trace."""
+    if requested not in KERNEL_IMPLS:
+        raise ValueError(
+            f"unknown kernel impl {requested!r} for {where}; expected one "
+            f"of {KERNEL_IMPLS}")
+    return requested
+
+
 def interpret_default(backend: Optional[str] = None) -> bool:
-    """Pallas interpret mode: compiled on TPU, interpreter elsewhere (the
-    kernels are Mosaic-TPU programs; CPU has no Pallas lowering and the
-    GPU/Triton path cannot lower pltpu memory spaces)."""
+    """Pallas interpret mode for the MOSAIC kernels: compiled on TPU,
+    interpreter elsewhere (CPU has no Pallas lowering and the GPU/Triton
+    path cannot lower pltpu memory spaces)."""
     return (backend or current_backend()) != "tpu"
 
 
-def resolve(requested: str, backend: Optional[str] = None) -> KernelDispatch:
-    """Map a requested impl ("auto" | "pallas" | "reference" | "naive") to a
-    concrete ``KernelDispatch`` for ``backend`` (default: the live one)."""
+_NATIVE_VARIANT = {"tpu": "mosaic", "gpu": "triton"}
+
+
+def resolve(requested: str, backend: Optional[str] = None,
+            kernel: Optional[str] = None, shape=None,
+            design=None) -> KernelDispatch:
+    """Map a requested impl (one of ``KERNEL_IMPLS``) to a concrete
+    ``KernelDispatch`` for ``backend`` (default: the live one).
+
+    ``kernel`` ("flash_attention" | "ssd" | "swa_avg") plus ``shape`` (the
+    kernel's bucket tuple, see ``tuning.shape_bucket``) enable the tuning-
+    cache lookup; ``design`` (DesignPoint or 4-tuple) pins an explicit
+    design point, bypassing the cache — the config-surface hook tests use.
+    """
     backend = backend or current_backend()
+    validate_impl(requested)
+    variant: Optional[str] = None
     if requested == "auto":
-        impl = "pallas" if backend == "tpu" else "reference"
-    elif requested in ("pallas", "reference", "naive"):
-        impl = requested
+        variant = _NATIVE_VARIANT.get(backend)
+        impl = "pallas" if variant else "reference"
+    elif requested == "pallas":
+        impl = "pallas"
+        # off-accelerator, forced "pallas" keeps its historical meaning:
+        # interpret the Mosaic program (the TPU-kernel tests rely on it)
+        variant = _NATIVE_VARIANT.get(backend, "mosaic")
+    elif requested in ("mosaic", "triton"):
+        impl, variant = "pallas", requested
     else:
-        raise ValueError(
-            f"unknown kernel impl {requested!r}; expected one of "
-            f"{KERNEL_IMPLS}")
-    return KernelDispatch(impl=impl, interpret=interpret_default(backend),
-                          backend=backend)
+        impl = requested
+
+    if variant == "triton":
+        interpret = backend != "gpu"
+    else:
+        interpret = interpret_default(backend)
+
+    dp, hit = None, False
+    if impl == "pallas" and kernel is not None:
+        if design is not None:
+            dp = tuning.as_design(design)
+        else:
+            dp, hit = tuning.design_for(backend, kernel, shape)
+    return KernelDispatch(impl=impl, interpret=interpret, backend=backend,
+                          variant=variant, design=dp, cache_hit=hit)

@@ -1,0 +1,403 @@
+"""Blockwise flash attention as a Triton-lowered Pallas GPU kernel.
+
+GPU adaptation notes (vs the Mosaic-TPU program in kernel.py):
+  * CUDA thread blocks run CONCURRENTLY, so the TPU trick of carrying the
+    online-softmax accumulators in VMEM scratch across sequential minor-grid
+    steps does not port. Instead each program owns one (batch-head, q-block)
+    tile and streams the KV blocks itself with an in-kernel ``fori_loop``
+    over ``pl.ds`` loads — the canonical Triton flash pattern; accumulators
+    live in registers.
+  * BlockSpecs use ``None`` leading dims (squeezed) and NO pltpu memory
+    spaces; K/V map the whole (padded) sequence per program and the loop
+    does the tiling, so ``block_q``/``block_k`` are free design-point
+    parameters swept by benchmarks/bench_kernels.py.
+  * ``num_warps``/``num_stages`` are explicit design-point parameters
+    forwarded as ``plgpu.TritonCompilerParams`` (ignored in interpret mode,
+    which is how CPU CI equivalence-tests this file).
+  * The causal/window structure bounds the KV loop (skips fully-masked
+    blocks) and the in-block iota mask handles the boundaries, so padded
+    and masked positions contribute exactly zero.
+  * Head dim is padded to a power of two >= 16: ``tl.dot`` requires every
+    matmul dimension >= 16, and the same padding runs under the
+    interpreter so CPU tests exercise the compiled layout.
+  * Backward is flash-attention-2 style, mirrored from the TPU kernels: a
+    dQ program per (batch-head, q-block) and a dK/dV program per
+    (batch-kv-head, kv-block); GQA's head-group reduction runs as a
+    statically unrolled loop over the G query heads of the group, with the
+    group's Q rows re-laid-out contiguously so every load stays 2-D.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import triton as plgpu
+
+from repro.kernels import dispatch
+from repro.kernels.tuning import DEFAULT_DESIGN, DesignPoint, as_design
+
+NEG_INF = -1e30
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (max(1, n) - 1).bit_length()
+
+
+def _design(design) -> DesignPoint:
+    if design is None:
+        return DEFAULT_DESIGN["flash_attention"]
+    return as_design(design)
+
+
+def _compiler_params(dp: DesignPoint):
+    return plgpu.TritonCompilerParams(num_warps=dp.num_warps,
+                                      num_stages=dp.num_stages)
+
+
+def _layout(q, k, v, block_q, block_k):
+    """Flatten to (B*H, S, D) batch-head major; pad D to pow2 >= 16 and the
+    sequences to block multiples (Triton dot dims must be >= 16)."""
+    B, Sq, H, D = q.shape
+    _, Skv, KVH, _ = k.shape
+    Dp = max(16, _next_pow2(D))
+    block_q = max(16, min(block_q, _next_pow2(Sq)))
+    block_k = max(16, min(block_k, _next_pow2(Skv)))
+    Sqp = (Sq + block_q - 1) // block_q * block_q
+    Skvp = (Skv + block_k - 1) // block_k * block_k
+
+    def prep(x, S, Sp, NH):
+        x = jnp.swapaxes(x, 1, 2).reshape(B * NH, S, x.shape[-1])
+        return jnp.pad(x, ((0, 0), (0, Sp - S), (0, Dp - x.shape[-1])))
+
+    return (prep(q, Sq, Sqp, H), prep(k, Skv, Skvp, KVH),
+            prep(v, Skv, Skvp, KVH), Dp, block_q, block_k, Sqp, Skvp)
+
+
+def _kv_bounds(qi, *, nk, block_q, block_k, q_offset, causal, window):
+    """[lo, hi) kv-block loop bounds for q-block ``qi`` — skip blocks the
+    causal/window mask would fully zero (iota masking still guards the
+    boundaries inside the loop)."""
+    lo = jnp.int32(0)
+    hi = jnp.int32(nk)
+    if causal:
+        hi = jnp.minimum(
+            hi, (qi * block_q + block_q + q_offset + block_k - 1) // block_k)
+    if window > 0:
+        lo = jnp.maximum(
+            lo, (qi * block_q + q_offset - window + 1) // block_k)
+    return lo, hi
+
+
+def _fa_fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale, causal,
+                   window, block_q, block_k, q_offset, kv_len):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale               # (bq, D)
+    qpos = (qi * block_q + q_offset
+            + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0))
+
+    def body(ki, carry):
+        m_prev, l_prev, acc = carry
+        kb = pl.load(k_ref, (pl.ds(ki * block_k, block_k),
+                             slice(None))).astype(jnp.float32)
+        vb = pl.load(v_ref, (pl.ds(ki * block_k, block_k),
+                             slice(None))).astype(jnp.float32)
+        s = pl.dot(q, kb.T)                                  # (bq, bk)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(m_new > NEG_INF / 2, p, 0.0)
+        alpha = jnp.where(m_prev > NEG_INF / 2,
+                          jnp.exp(m_prev - m_new), 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + pl.dot(p, vb)
+        return m_new, l_new, acc
+
+    nk = k_ref.shape[0] // block_k
+    lo, hi = _kv_bounds(qi, nk=nk, block_q=block_q, block_k=block_k,
+                        q_offset=q_offset, causal=causal, window=window)
+    m0 = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    a0 = jnp.zeros((block_q, q.shape[1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
+
+    empty = l == 0.0                                         # fully masked
+    l_safe = jnp.where(empty, 1.0, l)
+    o_ref[...] = (acc / l_safe).astype(o_ref.dtype)
+    lse_ref[...] = jnp.where(empty[:, 0], 0.0,
+                             m[:, 0] + jnp.log(l_safe[:, 0]))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "q_offset", "design",
+                     "interpret"),
+)
+def flash_attention_triton_fwd(q, k, v, *, causal: bool = True,
+                               window: int = 0, scale: float | None = None,
+                               q_offset: int = 0,
+                               design: DesignPoint | None = None,
+                               interpret: bool | None = None):
+    """Forward returning (out (B,Sq,H,D), lse (B,Sq,H) f32). ``design``
+    carries (block_q, block_k, num_warps, num_stages); ``interpret=None``
+    resolves per backend (compiled on GPU, interpreter elsewhere)."""
+    if interpret is None:
+        interpret = dispatch.current_backend() != "gpu"
+    dp = _design(design)
+    B, Sq, H, D = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    scale = scale if scale is not None else D ** -0.5
+    qf, kf, vf, Dp, block_q, block_k, Sqp, Skvp = _layout(
+        q, k, v, dp.block_q or 128, dp.block_k or 128)
+    grid = (B * H, Sqp // block_q)
+
+    def q_map(bh, qi):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi):
+        b, h = bh // H, bh % H
+        return (b * KVH + h // G, 0, 0)
+
+    out, lse = pl.pallas_call(
+        functools.partial(
+            _fa_fwd_kernel, scale=scale, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, q_offset=q_offset,
+            kv_len=Skv),
+        out_shape=(
+            jax.ShapeDtypeStruct((B * H, Sqp, Dp), q.dtype),
+            jax.ShapeDtypeStruct((B * H, Sqp), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, Dp), q_map),
+            pl.BlockSpec((None, Skvp, Dp), kv_map),
+            pl.BlockSpec((None, Skvp, Dp), kv_map),
+        ],
+        out_specs=(
+            pl.BlockSpec((None, block_q, Dp), q_map),
+            pl.BlockSpec((None, block_q), lambda bh, qi: (bh, qi)),
+        ),
+        compiler_params=_compiler_params(dp),
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    out = jnp.swapaxes(out[:, :Sq, :D].reshape(B, H, Sq, D), 1, 2)
+    lse = jnp.swapaxes(lse[:, :Sq].reshape(B, H, Sq), 1, 2)
+    return out, lse
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "q_offset", "design",
+                     "interpret"),
+)
+def flash_attention_triton(q, k, v, *, causal: bool = True, window: int = 0,
+                           scale: float | None = None, q_offset: int = 0,
+                           design: DesignPoint | None = None,
+                           interpret: bool | None = None):
+    """q: (B, Sq, H, D); k, v: (B, Skv, KVH, D). Returns (B, Sq, H, D)."""
+    out, _ = flash_attention_triton_fwd(
+        q, k, v, causal=causal, window=window, scale=scale,
+        q_offset=q_offset, design=design, interpret=interpret)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# backward kernels (flash-attention-2 style: dQ pass + dK/dV pass)
+# ---------------------------------------------------------------------------
+
+
+def _fa_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                      dq_ref, *, scale, causal, window, block_q, block_k,
+                      q_offset, q_len, kv_len):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale
+    do = do_ref[...].astype(jnp.float32)
+    lse = lse_ref[...]                                       # (bq,)
+    delta = delta_ref[...]                                   # (bq,)
+    qpos = (qi * block_q + q_offset
+            + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0))
+
+    def body(ki, acc):
+        kb = pl.load(k_ref, (pl.ds(ki * block_k, block_k),
+                             slice(None))).astype(jnp.float32)
+        vb = pl.load(v_ref, (pl.ds(ki * block_k, block_k),
+                             slice(None))).astype(jnp.float32)
+        s = pl.dot(q, kb.T)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = (kpos < kv_len) & (qpos - q_offset < q_len)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp_ = pl.dot(do, vb.T)
+        ds = p * (dp_ - delta[:, None])
+        return acc + pl.dot(ds, kb)
+
+    nk = k_ref.shape[0] // block_k
+    lo, hi = _kv_bounds(qi, nk=nk, block_q=block_q, block_k=block_k,
+                        q_offset=q_offset, causal=causal, window=window)
+    acc = jax.lax.fori_loop(
+        lo, hi, body, jnp.zeros((block_q, q.shape[1]), jnp.float32))
+    dq_ref[...] = (acc * scale).astype(dq_ref.dtype)
+
+
+def _fa_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                       dk_ref, dv_ref, *, scale, causal, window, block_q,
+                       block_k, q_offset, q_len, kv_len, group, sqp):
+    """One program per (batch-kv-head, kv-block). Q/dO/LSE/delta arrive with
+    the group's G query heads laid out contiguously along the row axis
+    ((G*Sqp, D)), so the GQA reduction is a static Python loop over g plus
+    a fori_loop over q-blocks — every load a 2-D ``pl.ds`` slice."""
+    ki = pl.program_id(1)
+    k = k_ref[...].astype(jnp.float32)                       # (bk, D)
+    v = v_ref[...].astype(jnp.float32)
+    kpos = (ki * block_k
+            + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1))
+    nq = sqp // block_q
+
+    lo_q = jnp.int32(0)
+    hi_q = jnp.int32(nq)
+    if causal:
+        lo_q = jnp.maximum(lo_q, (ki * block_k - q_offset) // block_q)
+    if window > 0:
+        hi_q = jnp.minimum(
+            hi_q,
+            (ki * block_k + block_k + window - 2 - q_offset) // block_q + 1)
+
+    dk = jnp.zeros((block_k, k.shape[1]), jnp.float32)
+    dv = jnp.zeros((block_k, v.shape[1]), jnp.float32)
+    for g in range(group):
+        def body(qi, carry, g=g):
+            dk, dv = carry
+            row = g * sqp + qi * block_q
+            q = pl.load(q_ref, (pl.ds(row, block_q),
+                                slice(None))).astype(jnp.float32) * scale
+            do = pl.load(do_ref, (pl.ds(row, block_q),
+                                  slice(None))).astype(jnp.float32)
+            lse = pl.load(lse_ref, (pl.ds(row, block_q),))
+            delta = pl.load(delta_ref, (pl.ds(row, block_q),))
+            s = pl.dot(q, k.T)                               # (bq, bk)
+            qpos = (qi * block_q + q_offset
+                    + jax.lax.broadcasted_iota(
+                        jnp.int32, (block_q, block_k), 0))
+            mask = (kpos < kv_len) & (qpos - q_offset < q_len)
+            if causal:
+                mask &= kpos <= qpos
+            if window > 0:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask, s, NEG_INF)
+            p = jnp.exp(s - lse[:, None])                    # (bq, bk)
+            dv = dv + pl.dot(p.T, do)
+            dp_ = pl.dot(do, v.T)
+            ds = p * (dp_ - delta[:, None])
+            dk = dk + pl.dot(ds.T, q)
+            return dk, dv
+
+        dk, dv = jax.lax.fori_loop(lo_q, hi_q, body, (dk, dv))
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "q_offset", "design",
+                     "interpret"),
+)
+def flash_attention_triton_bwd(q, k, v, out, lse, do, *, causal: bool = True,
+                               window: int = 0, scale: float | None = None,
+                               q_offset: int = 0,
+                               design: DesignPoint | None = None,
+                               interpret: bool | None = None):
+    """Flash backward. Returns (dq, dk, dv) with the input shapes."""
+    if interpret is None:
+        interpret = dispatch.current_backend() != "gpu"
+    dp = _design(design)
+    B, Sq, H, D = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    scale = scale if scale is not None else D ** -0.5
+    qf, kf, vf, Dp, block_q, block_k, Sqp, Skvp = _layout(
+        q, k, v, dp.block_q or 128, dp.block_k or 128)
+    dof = _layout(do, k, v, block_q, block_k)[0]
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), -1)
+    deltaf = jnp.pad(jnp.swapaxes(delta, 1, 2).reshape(B * H, Sq),
+                     ((0, 0), (0, Sqp - Sq)))
+    lsef = jnp.pad(jnp.swapaxes(lse, 1, 2).reshape(B * H, Sq),
+                   ((0, 0), (0, Sqp - Sq)))
+    nq, nk = Sqp // block_q, Skvp // block_k
+
+    kw = dict(scale=scale, causal=causal, window=window, block_q=block_q,
+              block_k=block_k, q_offset=q_offset, q_len=Sq, kv_len=Skv)
+
+    def q_map(bh, qi):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi):
+        b, h = bh // H, bh % H
+        return (b * KVH + h // G, 0, 0)
+
+    dq = pl.pallas_call(
+        functools.partial(_fa_bwd_dq_kernel, **kw),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sqp, Dp), q.dtype),
+        grid=(B * H, nq),
+        in_specs=[
+            pl.BlockSpec((None, block_q, Dp), q_map),
+            pl.BlockSpec((None, Skvp, Dp), kv_map),
+            pl.BlockSpec((None, Skvp, Dp), kv_map),
+            pl.BlockSpec((None, block_q, Dp), q_map),
+            pl.BlockSpec((None, block_q), lambda bh, qi: (bh, qi)),
+            pl.BlockSpec((None, block_q), lambda bh, qi: (bh, qi)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, Dp), q_map),
+        compiler_params=_compiler_params(dp),
+        interpret=interpret,
+    )(qf, kf, vf, dof, lsef, deltaf)
+
+    # dK/dV: regroup the G query heads of each kv head contiguously so the
+    # kernel addresses them as 2-D row ranges: (B*H, Sqp, D) with rows
+    # b*H + hkv*G + g  ==  (B*KVH, G*Sqp, D) row-major.
+    def group_rows(x):
+        return x.reshape(B * KVH, G * Sqp, *x.shape[2:])
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_fa_bwd_dkv_kernel, **kw, group=G, sqp=Sqp),
+        out_shape=(
+            jax.ShapeDtypeStruct((B * KVH, Skvp, Dp), k.dtype),
+            jax.ShapeDtypeStruct((B * KVH, Skvp, Dp), v.dtype),
+        ),
+        grid=(B * KVH, nk),
+        in_specs=[
+            pl.BlockSpec((None, G * Sqp, Dp), lambda bkv, ki: (bkv, 0, 0)),
+            pl.BlockSpec((None, block_k, Dp), lambda bkv, ki: (bkv, ki, 0)),
+            pl.BlockSpec((None, block_k, Dp), lambda bkv, ki: (bkv, ki, 0)),
+            pl.BlockSpec((None, G * Sqp, Dp), lambda bkv, ki: (bkv, 0, 0)),
+            pl.BlockSpec((None, G * Sqp), lambda bkv, ki: (bkv, 0)),
+            pl.BlockSpec((None, G * Sqp), lambda bkv, ki: (bkv, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((None, block_k, Dp), lambda bkv, ki: (bkv, ki, 0)),
+            pl.BlockSpec((None, block_k, Dp), lambda bkv, ki: (bkv, ki, 0)),
+        ),
+        compiler_params=_compiler_params(dp),
+        interpret=interpret,
+    )(group_rows(qf), kf, vf, group_rows(dof), group_rows(lsef),
+      group_rows(deltaf))
+
+    def unflat(x, S, NH):
+        return jnp.swapaxes(x[:, :S, :D].reshape(B, NH, S, D), 1, 2)
+
+    return unflat(dq, Sq, H), unflat(dk, Skv, KVH), unflat(dv, Skv, KVH)

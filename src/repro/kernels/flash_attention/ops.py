@@ -5,15 +5,20 @@ chunks, online softmax). This is the path used for lowering/dry-run and CPU
 execution — it has the same O(S) memory behaviour as the kernel, so compiled
 HLO bytes reflect the flash algorithm rather than a materialized QK^T.
 
-``impl="pallas"``: the Pallas TPU kernel (compiled on TPU, interpreter
-elsewhere — see repro.kernels.dispatch). Gradient support via custom_vjp: forward
-runs the kernel, backward recomputes with the differentiable blockwise
-reference (standard recompute-in-backward strategy).
+``impl="pallas"``: the compiled kernel for the live backend — the Mosaic
+program (kernel.py) on TPU, the Triton program (kernel_gpu.py) on GPU;
+``impl="mosaic"``/``impl="triton"`` force a specific lowering (interpreter
+off its native backend — how CPU CI equivalence-tests both). Gradients via
+custom_vjp: forward runs the kernel, backward runs the true flash backward
+kernels with the forward's LSE.
 
 ``impl="naive"``: the oracle (tests only).
 
-``impl="auto"`` (the config default): backend-resolved — compiled Pallas
-on TPU, the blockwise reference elsewhere.
+``impl="auto"`` (the config default): backend-resolved — compiled Mosaic on
+TPU, compiled Triton on GPU, the blockwise reference on CPU
+(repro.kernels.dispatch); the resolved design point (block sizes,
+num_warps/num_stages) comes from the persisted tuning cache, or from the
+``design`` argument when a caller pins one.
 """
 from __future__ import annotations
 
@@ -28,6 +33,11 @@ from repro.kernels.flash_attention.kernel import (
     flash_attention_pallas, flash_attention_pallas_bwd,
     flash_attention_pallas_fwd,
 )
+from repro.kernels.flash_attention.kernel_gpu import (
+    flash_attention_triton, flash_attention_triton_bwd,
+    flash_attention_triton_fwd,
+)
+from repro.kernels.tuning import DEFAULT_DESIGN
 
 
 def _blockwise_reference(q, k, v, *, causal, window, scale, q_offset, chunk):
@@ -87,44 +97,85 @@ def _blockwise_reference(q, k, v, *, causal, window, scale, q_offset, chunk):
 
 
 # JAX 0.4.37: custom_vjp has no nondiff_argnames; positional argnums (all
-# static/hashable: bools, ints, float-or-None) express the same thing. The
-# bwd signature already receives them first, per the argnums convention.
+# static/hashable: bools, ints, float-or-None, frozen DesignPoint) express
+# the same thing. The bwd signature receives them first, per the argnums
+# convention.
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
-def _pallas_attention(q, k, v, causal, window, scale, q_offset, chunk,
+def _pallas_attention(q, k, v, causal, window, scale, q_offset, design,
                       interpret):
+    bq, bk = _mosaic_blocks(design)
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   scale=scale, q_offset=q_offset,
+                                  block_q=bq, block_k=bk,
                                   interpret=interpret)
 
 
-def _pallas_fwd(q, k, v, causal, window, scale, q_offset, chunk, interpret):
+def _mosaic_blocks(design):
+    dflt = DEFAULT_DESIGN["flash_attention"]
+    if design is None:
+        design = dflt
+    return design.block_q or dflt.block_q, design.block_k or dflt.block_k
+
+
+def _pallas_fwd(q, k, v, causal, window, scale, q_offset, design, interpret):
+    bq, bk = _mosaic_blocks(design)
     out, lse = flash_attention_pallas_fwd(
         q, k, v, causal=causal, window=window, scale=scale,
-        q_offset=q_offset, interpret=interpret)
+        q_offset=q_offset, block_q=bq, block_k=bk, interpret=interpret)
     return out, (q, k, v, out, lse)
 
 
-def _pallas_bwd(causal, window, scale, q_offset, chunk, interpret, res, g):
+def _pallas_bwd(causal, window, scale, q_offset, design, interpret, res, g):
     # true flash backward (Pallas dQ + dK/dV kernels, LSE from forward)
     q, k, v, out, lse = res
+    bq, bk = _mosaic_blocks(design)
     return flash_attention_pallas_bwd(
         q, k, v, out, lse, g, causal=causal, window=window, scale=scale,
-        q_offset=q_offset, interpret=interpret)
+        q_offset=q_offset, block_q=bq, block_k=bk, interpret=interpret)
 
 
 _pallas_attention.defvjp(_pallas_fwd, _pallas_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _triton_attention(q, k, v, causal, window, scale, q_offset, design,
+                      interpret):
+    return flash_attention_triton(q, k, v, causal=causal, window=window,
+                                  scale=scale, q_offset=q_offset,
+                                  design=design, interpret=interpret)
+
+
+def _triton_fwd(q, k, v, causal, window, scale, q_offset, design, interpret):
+    out, lse = flash_attention_triton_fwd(
+        q, k, v, causal=causal, window=window, scale=scale,
+        q_offset=q_offset, design=design, interpret=interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _triton_bwd(causal, window, scale, q_offset, design, interpret, res, g):
+    q, k, v, out, lse = res
+    return flash_attention_triton_bwd(
+        q, k, v, out, lse, g, causal=causal, window=window, scale=scale,
+        q_offset=q_offset, design=design, interpret=interpret)
+
+
+_triton_attention.defvjp(_triton_fwd, _triton_bwd)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     scale: float | None = None, q_offset: int = 0,
-                    chunk: int = 512, impl: str = "auto"):
-    """GQA flash attention. q: (B,Sq,H,D); k,v: (B,Skv,KVH,D)."""
-    d = dispatch.resolve(impl)
+                    chunk: int = 512, impl: str = "auto", design=None):
+    """GQA flash attention. q: (B,Sq,H,D); k,v: (B,Skv,KVH,D).
+    ``design`` pins a tuning design point (DesignPoint or 4-tuple);
+    default None consults the tuning cache for the resolved backend."""
+    d = dispatch.resolve(impl, kernel="flash_attention",
+                         shape=(k.shape[1], q.shape[-1]), design=design)
     if d.impl == "naive":
         return _ref.attention_ref(q, k, v, causal=causal, window=window,
                                   scale=scale, q_offset=q_offset)
     if d.impl == "pallas":
-        return _pallas_attention(q, k, v, causal, window, scale, q_offset,
-                                 chunk, d.interpret)
+        fn = _triton_attention if d.variant == "triton" else _pallas_attention
+        return fn(q, k, v, causal, window, scale, q_offset, d.design,
+                  d.interpret)
     return _blockwise_reference(q, k, v, causal=causal, window=window,
                                 scale=scale, q_offset=q_offset, chunk=chunk)

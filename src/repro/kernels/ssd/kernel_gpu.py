@@ -1,0 +1,279 @@
+"""Mamba-2 SSD intra-chunk kernel, Triton-lowered Pallas GPU variant.
+
+GPU adaptation notes (vs the Mosaic-TPU program in kernel.py):
+  * The TPU program was already one independent grid cell per
+    (batch-head, chunk) with no cross-step scratch, so the structure ports
+    directly; BlockSpecs switch to squeezed ``None`` leading dims and
+    ``num_warps``/``num_stages`` become explicit design-point parameters
+    (``plgpu.TritonCompilerParams``).
+  * ``jnp.cumsum`` / ``.at[].add`` have no reliable Triton lowering on this
+    JAX version, so the in-chunk cumulative decay is computed as a masked
+    L x L broadcast + row-sum reduction (L is chunk-sized, and the kernel
+    already materializes L x L decay/score tiles) and the backward's
+    last-position scatter becomes an iota mask.
+  * Everything else — the decay (segsum) matrix, the O(L^2) score matmul,
+    the chunk-local state outer product — is identical math to the TPU
+    kernel; the inter-chunk recurrence stays in JAX (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import triton as plgpu
+
+from repro.kernels import dispatch
+from repro.kernels.tuning import DEFAULT_DESIGN, DesignPoint, as_design
+
+
+def _design(design) -> DesignPoint:
+    if design is None:
+        return DEFAULT_DESIGN["ssd"]
+    return as_design(design)
+
+
+def _compiler_params(dp: DesignPoint):
+    return plgpu.TritonCompilerParams(num_warps=dp.num_warps,
+                                      num_stages=dp.num_stages)
+
+
+def _tri_mats(L):
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    return ii, jj
+
+
+def _cumsum_masked(x):
+    """Inclusive cumulative sum of a (L,) vector via a masked broadcast +
+    row-sum — the Triton-lowerable form of jnp.cumsum (tl.dot would need
+    every matmul dim >= 16, which a (L, 1) column vector violates)."""
+    ii, jj = _tri_mats(x.shape[0])
+    return jnp.sum(jnp.where(ii >= jj, x[None, :], 0.0), axis=1)
+
+
+def _rev_cumsum_masked(x):
+    """Reverse (suffix) cumulative sum via the upper-triangular mask."""
+    ii, jj = _tri_mats(x.shape[0])
+    return jnp.sum(jnp.where(ii <= jj, x[None, :], 0.0), axis=1)
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref,
+                      y_ref, state_ref, cum_ref):
+    x = x_ref[...].astype(jnp.float32)          # (L, P)
+    dt = dt_ref[...].astype(jnp.float32)        # (L,)
+    bm = b_ref[...].astype(jnp.float32)         # (L, N)
+    cm = c_ref[...].astype(jnp.float32)         # (L, N)
+    a = a_ref[0]                                # scalar A (negative)
+
+    L = x.shape[0]
+    dA = dt * a                                 # (L,)
+    cum = _cumsum_masked(dA)                       # (L,)
+
+    # segsum decay matrix: seg[i, j] = exp(cum_i - cum_j) for i >= j else 0
+    diff = cum[:, None] - cum[None, :]
+    ii, jj = _tri_mats(L)
+    seg = jnp.exp(jnp.where(ii >= jj, diff, -jnp.inf))
+
+    scores = pl.dot(cm, bm.T)                   # (L, L)
+    dx = dt[:, None] * x                        # (L, P)
+    y = pl.dot(scores * seg, dx)                # (L, P)
+
+    # chunk-local final state: sum_j exp(cum_end - cum_j) dt_j x_j (x) B_j
+    w = jnp.exp(cum[L - 1] - cum) * dt          # (L,)
+    state = pl.dot(x.T, bm * w[:, None])        # (P, N)
+
+    y_ref[...] = y.astype(y_ref.dtype)
+    state_ref[...] = state
+    cum_ref[...] = cum
+
+
+def _ssd_chunk_bwd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref,
+                          dy_ref, dstate_ref, dcum_ref,
+                          dx_ref, ddt_ref, db_ref, dc_ref, da_ref):
+    """Intra-chunk SSD backward (mirror of the TPU kernel's chain rule);
+    cum recomputed in registers, all L x L work on the tensor cores."""
+    x = x_ref[...].astype(jnp.float32)          # (L, P)
+    dt = dt_ref[...].astype(jnp.float32)        # (L,)
+    bm = b_ref[...].astype(jnp.float32)         # (L, N)
+    cm = c_ref[...].astype(jnp.float32)         # (L, N)
+    a = a_ref[0]
+    dy = dy_ref[...].astype(jnp.float32)        # (L, P)
+    dS = dstate_ref[...].astype(jnp.float32)    # (P, N)
+    dcum = dcum_ref[...].astype(jnp.float32)    # (L,) from inter-chunk vjp
+
+    L = x.shape[0]
+    cum = _cumsum_masked(dt * a)
+    ii, jj = _tri_mats(L)
+    seg = jnp.exp(jnp.where(ii >= jj, cum[:, None] - cum[None, :],
+                            -jnp.inf))
+    scores = pl.dot(cm, bm.T)
+    G = scores * seg
+    dx_in = dt[:, None] * x                     # (L, P)
+
+    # --- y_intra = G @ dx_in ---
+    dG = pl.dot(dy, dx_in.T)                    # (L, L)
+    d_dx = pl.dot(G.T, dy)                      # (L, P)
+    dGseg = dG * seg
+    dc = pl.dot(dGseg, bm)                      # (L, N)
+    db = pl.dot(dGseg.T, cm)                    # (L, N)
+    E = dG * G                                  # (L, L)
+    dcum = dcum + jnp.sum(E, axis=1) - jnp.sum(E, axis=0)
+
+    # --- state = sum_j w_j x_j (x) B_j, w_j = exp(cum_L - cum_j) dt_j ---
+    wexp = jnp.exp(cum[L - 1] - cum)            # (L,)
+    w = wexp * dt
+    dS_b = pl.dot(bm, dS.T)                     # (L, P)
+    dw = jnp.sum(x * dS_b, axis=1)              # (L,)
+    dx = w[:, None] * dS_b
+    db = db + w[:, None] * pl.dot(x, dS)        # (L, N)
+    # dcum_j -= dw_j w_j, with the total re-added at the last position
+    # (iota mask — the Triton-lowerable form of .at[-1].add)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (L,), 0)
+    dcum = dcum - dw * w + jnp.where(pos == L - 1, jnp.sum(dw * w), 0.0)
+    ddt = dw * wexp
+
+    # --- dx_in = dt o x ---
+    ddt = ddt + jnp.sum(d_dx * x, axis=1)
+    dx = dx + dt[:, None] * d_dx
+
+    # --- cum = cumsum(dt a): reverse-cumsum the dcum ---
+    rev = _rev_cumsum_masked(dcum)                 # (L,)
+    ddt = ddt + a * rev
+    da = jnp.sum(dt * rev)
+
+    dx_ref[...] = dx
+    ddt_ref[...] = ddt
+    db_ref[...] = db
+    dc_ref[...] = dc
+    da_ref[0] = da
+
+
+def _flatten(x, dt, A, Bm, Cm):
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    BH = Bsz * H
+    xf = jnp.swapaxes(x, 1, 2).reshape(BH, S, P)
+    dtf = jnp.swapaxes(dt, 1, 2).reshape(BH, S)
+    bf = jnp.swapaxes(jnp.repeat(Bm, rep, axis=2), 1, 2).reshape(BH, S, N)
+    cf = jnp.swapaxes(jnp.repeat(Cm, rep, axis=2), 1, 2).reshape(BH, S, N)
+    af = jnp.tile(A.astype(jnp.float32)[None, :], (Bsz, 1)).reshape(BH, 1)
+    return xf, dtf, bf, cf, af
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "design", "interpret"))
+def ssd_chunk_triton(x, dt, A, Bm, Cm, *, chunk: int = 128,
+                     design: DesignPoint | None = None,
+                     interpret: bool | None = None):
+    """Intra-chunk SSD, Triton lowering. Same contract as
+    ``ssd_chunk_pallas``: x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm, Cm:
+    (B,S,G,N) — returns (y_intra (B,S,H,P) f32, states (B,nc,H,P,N) f32,
+    cum (B,S,H) f32). S % chunk must be 0."""
+    if interpret is None:
+        interpret = dispatch.current_backend() != "gpu"
+    dp = _design(design)
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    BH = Bsz * H
+    xf, dtf, bf, cf, af = _flatten(x, dt, A, Bm, Cm)
+
+    grid = (BH, nc)
+    y, states, cum = pl.pallas_call(
+        _ssd_chunk_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((BH, S, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nc, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((BH, S), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((None, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, 1), lambda bh, ci: (bh, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((None, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, None, P, N), lambda bh, ci: (bh, ci, 0, 0)),
+            pl.BlockSpec((None, chunk), lambda bh, ci: (bh, ci)),
+        ),
+        compiler_params=_compiler_params(dp),
+        interpret=interpret,
+    )(xf, dtf, bf, cf, af)
+
+    y = jnp.swapaxes(y.reshape(Bsz, H, S, P), 1, 2)
+    states = jnp.swapaxes(states.reshape(Bsz, H, nc, P, N), 1, 2)
+    cum = jnp.swapaxes(cum.reshape(Bsz, H, S), 1, 2)
+    return y, states, cum
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "design", "interpret"))
+def ssd_chunk_triton_bwd(x, dt, A, Bm, Cm, dy, dstates, dcum, *,
+                         chunk: int = 128,
+                         design: DesignPoint | None = None,
+                         interpret: bool | None = None):
+    """Backward of ssd_chunk_triton; same contract as
+    ``ssd_chunk_pallas_bwd`` (grouped B/C gradients summed over the heads
+    sharing each group)."""
+    if interpret is None:
+        interpret = dispatch.current_backend() != "gpu"
+    dp = _design(design)
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nc = S // chunk
+    BH = Bsz * H
+    xf, dtf, bf, cf, af = _flatten(x, dt, A, Bm, Cm)
+    dyf = jnp.swapaxes(dy.astype(jnp.float32), 1, 2).reshape(BH, S, P)
+    dsf = jnp.swapaxes(dstates.astype(jnp.float32), 1, 2).reshape(
+        BH, nc, P, N)
+    dcf = jnp.swapaxes(dcum.astype(jnp.float32), 1, 2).reshape(BH, S)
+
+    grid = (BH, nc)
+    dx, ddt, db, dc, da = pl.pallas_call(
+        _ssd_chunk_bwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((BH, S, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH, S), jnp.float32),
+            jax.ShapeDtypeStruct((BH, S, N), jnp.float32),
+            jax.ShapeDtypeStruct((BH, S, N), jnp.float32),
+            jax.ShapeDtypeStruct((BH, nc), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((None, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, 1), lambda bh, ci: (bh, 0)),
+            pl.BlockSpec((None, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, None, P, N), lambda bh, ci: (bh, ci, 0, 0)),
+            pl.BlockSpec((None, chunk), lambda bh, ci: (bh, ci)),
+        ],
+        out_specs=(
+            pl.BlockSpec((None, chunk, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, chunk), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((None, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, chunk, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((None, 1), lambda bh, ci: (bh, ci)),
+        ),
+        compiler_params=_compiler_params(dp),
+        interpret=interpret,
+    )(xf, dtf, bf, cf, af, dyf, dsf, dcf)
+
+    def unflat(t, extra):
+        return jnp.swapaxes(t.reshape((Bsz, H) + extra), 1, 2)
+
+    dx_out = unflat(dx, (S, P))
+    ddt_out = unflat(ddt, (S,))
+    dA_out = jnp.sum(da.reshape(Bsz, H, nc), axis=(0, 2))
+    db_out = unflat(db, (S, N)).reshape(Bsz, S, G, rep, N).sum(3)
+    dc_out = unflat(dc, (S, N)).reshape(Bsz, S, G, rep, N).sum(3)
+    return dx_out, ddt_out, dA_out, db_out, dc_out

@@ -4,13 +4,18 @@
 log-depth associative scan over chunk states. Same algorithm and memory
 behaviour as the kernel path; used for lowering/dry-run and CPU training.
 
-``impl="pallas"``: intra-chunk block from the Pallas kernel, inter-chunk
-correction in JAX. Backward recomputes via the reference (custom_vjp).
+``impl="pallas"``: intra-chunk block from the compiled kernel for the live
+backend — Mosaic (kernel.py) on TPU, Triton (kernel_gpu.py) on GPU — with
+the inter-chunk correction in JAX; ``impl="mosaic"``/``impl="triton"``
+force a lowering (interpreter off its native backend). Backward runs the
+matching intra-chunk backward kernel (custom_vjp).
 
 ``impl="naive"``: the sequential-recurrence oracle (tests only).
 
-``impl="auto"`` (the config default): backend-resolved — compiled Pallas
-on TPU, the chunked reference elsewhere (repro.kernels.dispatch).
+``impl="auto"`` (the config default): backend-resolved — compiled Mosaic on
+TPU, compiled Triton on GPU, the chunked reference on CPU
+(repro.kernels.dispatch); the Triton path carries the tuning-cache design
+point (num_warps/num_stages) unless the caller pins one via ``design``.
 """
 from __future__ import annotations
 
@@ -22,6 +27,7 @@ import jax.numpy as jnp
 from repro.kernels import dispatch
 from repro.kernels.ssd import ref as _ref
 from repro.kernels.ssd.kernel import ssd_chunk_pallas, ssd_chunk_pallas_bwd
+from repro.kernels.ssd.kernel_gpu import ssd_chunk_triton, ssd_chunk_triton_bwd
 
 
 def _intra_chunk_jnp(x, dt, A, Bm, Cm, chunk):
@@ -116,11 +122,30 @@ def _chunked_reference(x, dt, A, Bm, Cm, D, chunk, init_state):
     return y, final
 
 
-# JAX 0.4.37: custom_vjp has no nondiff_argnames; chunk and interpret
-# (args 7/8, static) become positional nondiff argnums — bwd takes them
-# first.
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8))
-def _pallas_ssd(x, dt, A, Bm, Cm, D, init_state, chunk, interpret):
+def _intra_fwd(variant, xp, dtp, A, Bmp, Cmp, c, design, interpret):
+    if variant == "triton":
+        return ssd_chunk_triton(xp, dtp, A, Bmp, Cmp, chunk=c,
+                                design=design, interpret=interpret)
+    return ssd_chunk_pallas(xp, dtp, A, Bmp, Cmp, chunk=c,
+                            interpret=interpret)
+
+
+def _intra_bwd(variant, xp, dtp, A, Bmp, Cmp, d_yi, d_st, d_cum, c, design,
+               interpret):
+    if variant == "triton":
+        return ssd_chunk_triton_bwd(xp, dtp, A, Bmp, Cmp, d_yi, d_st,
+                                    d_cum, chunk=c, design=design,
+                                    interpret=interpret)
+    return ssd_chunk_pallas_bwd(xp, dtp, A, Bmp, Cmp, d_yi, d_st, d_cum,
+                                chunk=c, interpret=interpret)
+
+
+# JAX 0.4.37: custom_vjp has no nondiff_argnames; chunk, variant, design and
+# interpret (args 7-10, all static/hashable) become positional nondiff
+# argnums — bwd takes them first.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def _pallas_ssd(x, dt, A, Bm, Cm, D, init_state, chunk, variant, design,
+                interpret):
     S = x.shape[1]
     c = min(chunk, S)
     pad = (-S) % c
@@ -129,8 +154,8 @@ def _pallas_ssd(x, dt, A, Bm, Cm, D, init_state, chunk, interpret):
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
         Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    y_intra, states, cum = ssd_chunk_pallas(x, dt, A, Bm, Cm, chunk=c,
-                                            interpret=interpret)
+    y_intra, states, cum = _intra_fwd(variant, x, dt, A, Bm, Cm, c, design,
+                                      interpret)
     y, final = _inter_chunk(y_intra, states, cum, x, dt, A, Cm, D, c,
                             init_state)
     if pad:
@@ -138,7 +163,8 @@ def _pallas_ssd(x, dt, A, Bm, Cm, D, init_state, chunk, interpret):
     return y, final
 
 
-def _pallas_fwd(x, dt, A, Bm, Cm, D, init_state, chunk, interpret):
+def _pallas_fwd(x, dt, A, Bm, Cm, D, init_state, chunk, variant, design,
+                interpret):
     S = x.shape[1]
     c = min(chunk, S)
     pad = (-S) % c
@@ -148,8 +174,8 @@ def _pallas_fwd(x, dt, A, Bm, Cm, D, init_state, chunk, interpret):
         dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         Bmp = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
         Cmp = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    y_intra, states, cum = ssd_chunk_pallas(xp, dtp, A, Bmp, Cmp, chunk=c,
-                                            interpret=interpret)
+    y_intra, states, cum = _intra_fwd(variant, xp, dtp, A, Bmp, Cmp, c,
+                                      design, interpret)
     y, final = _inter_chunk(y_intra, states, cum, xp, dtp, A, Cmp, D, c,
                             init_state)
     if pad:
@@ -158,7 +184,7 @@ def _pallas_fwd(x, dt, A, Bm, Cm, D, init_state, chunk, interpret):
                         states, cum, pad, c)
 
 
-def _pallas_bwd(chunk, interpret, res, g):
+def _pallas_bwd(chunk, variant, design, interpret, res, g):
     """True kernel backward: jnp autodiff through the (cheap) inter-chunk
     combine, then the Pallas intra-chunk backward kernel for the O(L²)
     part — no full forward recompute."""
@@ -180,9 +206,9 @@ def _pallas_bwd(chunk, interpret, res, g):
         _, vjp = jax.vjp(inter, y_intra, states, cum, xp, Cmp, D, init_state)
         d_yi, d_st, d_cum, dx1, dCm1, dD, d_init = vjp((dy, dfinal))
 
-    dx2, ddt, dA, dBm, dCm2 = ssd_chunk_pallas_bwd(
-        xp, dtp, A, Bmp, Cmp, d_yi, d_st, d_cum, chunk=c,
-        interpret=interpret)
+    dx2, ddt, dA, dBm, dCm2 = _intra_bwd(
+        variant, xp, dtp, A, Bmp, Cmp, d_yi, d_st, d_cum, c, design,
+        interpret)
     dx = dx1.astype(jnp.float32) + dx2
     dCm = dCm1.astype(jnp.float32) + dCm2
     if pad:
@@ -197,16 +223,19 @@ _pallas_ssd.defvjp(_pallas_fwd, _pallas_bwd)
 
 
 def ssd_scan(x, dt, A, Bm, Cm, D=None, *, init_state=None, chunk: int = 128,
-             impl: str = "auto"):
+             impl: str = "auto", design=None):
     """Mamba-2 SSD scan. x: (B,S,H,P); dt: (B,S,H) post-softplus; A: (H,)
     negative; Bm, Cm: (B,S,G,N); D: (H,) or None.
-    Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32)."""
-    d = dispatch.resolve(impl)
+    Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32).
+    ``design`` pins a tuning design point (DesignPoint or 4-tuple);
+    default None consults the tuning cache for the resolved backend."""
+    d = dispatch.resolve(impl, kernel="ssd",
+                         shape=(x.shape[1], x.shape[3]), design=design)
     if d.impl == "naive":
         return _ref.ssd_ref(x, dt, A, Bm, Cm, D, init_state)
     if d.impl == "pallas":
         return _pallas_ssd(x, dt, A, Bm, Cm, D, init_state, chunk,
-                           d.interpret)
+                           d.variant, d.design, d.interpret)
     return _chunked_reference(x, dt, A, Bm, Cm, D, chunk, init_state)
 
 

@@ -1,0 +1,71 @@
+"""Fused streaming weight-average, Triton-lowered Pallas GPU variant.
+
+GPU adaptation notes (vs the Mosaic-TPU program in kernel.py):
+  * The TPU (8, 1024) sublane x lane tile becomes a flat 1-D element tile of
+    ``block_q`` elements (the design point's only block parameter; CUDA
+    blocks have no sublane structure), one tile per grid cell with
+    ``num_warps``/``num_stages`` from the tuning cache.
+  * Same fused read-once/write-once contract, and the SAME
+    ``avg + (w - avg) / (n + 1)`` divide — never multiply-by-reciprocal —
+    so the GPU kernel stays BITWISE equal to the jnp reference and to the
+    TPU kernel (the bitwise guarantee phase-2/phase-3 averaging tests pin).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import triton as plgpu
+
+from repro.kernels import dispatch
+from repro.kernels.tuning import DEFAULT_DESIGN, DesignPoint, as_design
+
+
+def _design(design) -> DesignPoint:
+    if design is None:
+        return DEFAULT_DESIGN["swa_avg"]
+    return as_design(design)
+
+
+def _avg_kernel(n_ref, avg_ref, w_ref, o_ref):
+    n = n_ref[0]
+    avg = avg_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    # divide, NOT multiply-by-reciprocal — see module docstring (bitwise
+    # equality with the jnp reference is load-bearing)
+    o_ref[...] = (avg + (w - avg) / (n + 1.0)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("design", "interpret"))
+def running_average_triton(avg, w, n, *, design: DesignPoint | None = None,
+                           interpret: bool | None = None):
+    """avg, w: 1-D same-length arrays; n: scalar float count. Same contract
+    as ``running_average_pallas``."""
+    if interpret is None:
+        interpret = dispatch.current_backend() != "gpu"
+    dp = _design(design)
+    assert avg.ndim == 1 and avg.shape == w.shape
+    size = avg.shape[0]
+    tile = dp.block_q or DEFAULT_DESIGN["swa_avg"].block_q
+    pad = (-size) % tile
+    ap = jnp.pad(avg, (0, pad))
+    wp = jnp.pad(w, (0, pad))
+    nf = jnp.asarray(n, jnp.float32).reshape(1)
+
+    out = pl.pallas_call(
+        _avg_kernel,
+        out_shape=jax.ShapeDtypeStruct(ap.shape, avg.dtype),
+        grid=(ap.shape[0] // tile,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        compiler_params=plgpu.TritonCompilerParams(
+            num_warps=dp.num_warps, num_stages=dp.num_stages),
+        interpret=interpret,
+    )(nf, ap, wp)
+    return out[:size]

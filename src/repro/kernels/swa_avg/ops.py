@@ -1,8 +1,10 @@
 """Public streaming-average op, scalar-leaf and pytree forms.
 
 ``impl="auto"`` (the default) resolves per backend via
-repro.kernels.dispatch: the fused Pallas kernel on TPU, the jnp
-reference elsewhere.
+repro.kernels.dispatch: the fused Mosaic kernel on TPU, the fused Triton
+kernel on GPU, the jnp reference on CPU. All three paths use the same
+``avg + (w - avg) / (n + 1)`` divide, so results are BITWISE equal across
+impls — the property the averaging tests pin.
 """
 from __future__ import annotations
 
@@ -11,16 +13,26 @@ import jax.numpy as jnp
 
 from repro.kernels import dispatch
 from repro.kernels.swa_avg.kernel import running_average_pallas
+from repro.kernels.swa_avg.kernel_gpu import running_average_triton
 from repro.kernels.swa_avg.ref import running_average_ref
 
 
-def running_average(avg, w, n, *, impl: str = "auto"):
-    """avg' = avg + (w - avg)/(n+1) for one array."""
-    d = dispatch.resolve(impl)
+def running_average(avg, w, n, *, impl: str = "auto", design=None):
+    """avg' = avg + (w - avg)/(n+1) for one array. ``design`` pins a tuning
+    design point (element tile / num_warps); default None consults the
+    tuning cache for the resolved backend."""
+    d = dispatch.resolve(impl, kernel="swa_avg", shape=(avg.size,),
+                         design=design)
     if d.impl == "pallas":
-        flat = running_average_pallas(avg.reshape(-1), w.reshape(-1),
-                                      jnp.asarray(n, jnp.float32),
-                                      interpret=d.interpret)
+        if d.variant == "triton":
+            flat = running_average_triton(avg.reshape(-1), w.reshape(-1),
+                                          jnp.asarray(n, jnp.float32),
+                                          design=d.design,
+                                          interpret=d.interpret)
+        else:
+            flat = running_average_pallas(avg.reshape(-1), w.reshape(-1),
+                                          jnp.asarray(n, jnp.float32),
+                                          interpret=d.interpret)
         return flat.reshape(avg.shape)
     return running_average_ref(avg, w, n)
 

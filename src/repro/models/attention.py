@@ -81,7 +81,8 @@ def gqa_forward(params, x, cfg: ModelConfig, *, positions=None, window: int = 0,
         q, k = _rope(cfg, q, k, positions)
     out = flash_attention(
         q, k, v, causal=causal and cross_x is None, window=window,
-        chunk=cfg.attention_chunk, impl=cfg.attention_impl)
+        chunk=cfg.attention_chunk, impl=cfg.attention_impl,
+        design=cfg.attention_design or None)
     B, S = x.shape[:2]
     out = mdot(out.reshape(B, S, -1), params["wo"], dtype)
     if not return_cache:
@@ -397,7 +398,8 @@ def mla_forward(params, x, cfg: ModelConfig, *, positions=None,
     qh = q.shape[-1]
     vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qh - m.v_head_dim)))
     out = flash_attention(q, k, vpad, causal=True, chunk=cfg.attention_chunk,
-                          impl=cfg.attention_impl, scale=qh ** -0.5)
+                          impl=cfg.attention_impl, scale=qh ** -0.5,
+                          design=cfg.attention_design or None)
     out = out[..., :m.v_head_dim].reshape(B, S, -1)
     out = mdot(out, params["wo"], dtype)
     if not return_cache:

@@ -106,7 +106,8 @@ def mamba_forward(params, u, cfg: ModelConfig, *, return_cache: bool = False,
     y, final_state = ssd_scan(
         x, dt, A, Bm, Cm, params["D"],
         init_state=None if init_cache is None else init_cache["state"],
-        chunk=s.chunk_size, impl=cfg.ssd_impl)
+        chunk=s.chunk_size, impl=cfg.ssd_impl,
+        design=cfg.ssd_design or None)
     y = y.astype(dtype).reshape(B, S, d_in)
     y = gated_rmsnorm(y, z, params["norm_scale"], cfg.norm_eps)
     out = mdot(y, params["out_proj"], dtype)

@@ -36,13 +36,19 @@ def pytest_configure(config):
         "markers",
         "tpu: needs a real TPU (Pallas compiled mode, ICI-bandwidth asserts)"
         " — skipped on CPU hosts")
+    config.addinivalue_line(
+        "markers",
+        "gpu: needs a real GPU (compiled Triton lowering; the interpret-"
+        "mode equivalence tests run everywhere) — skipped on CPU hosts")
 
 
 def pytest_collection_modifyitems(config, items):
-    if jax.default_backend() == "tpu":
-        return
-    skip_tpu = pytest.mark.skip(
-        reason="requires a real TPU; this host runs the XLA CPU backend")
+    backend = jax.default_backend()
+    skips = {marker: pytest.mark.skip(
+        reason=f"requires a real {marker.upper()}; this host runs the XLA "
+               f"{backend.upper()} backend")
+        for marker in ("tpu", "gpu") if marker != backend}
     for item in items:
-        if "tpu" in item.keywords:
-            item.add_marker(skip_tpu)
+        for marker, skip in skips.items():
+            if marker in item.keywords:
+                item.add_marker(skip)

@@ -29,21 +29,39 @@ def test_resolve_on_cpu_ci_backend():
 
 
 def test_resolve_on_accelerators():
-    """TPU compiles the Pallas kernels; GPU does NOT (they are Mosaic-TPU
-    programs — pltpu memory spaces have no Triton lowering), so auto on
-    gpu stays on the reference and forced pallas interprets. (Explicit
-    backend arg — no accelerator needed to check the table.)"""
+    """Both accelerator backends compile their native lowering: Mosaic on
+    TPU, Triton on GPU — auto resolves to a compiled pallas impl on each.
+    (Explicit backend arg — no accelerator needed to check the table.)"""
     for requested in ("auto", "pallas"):
         d = dispatch.resolve(requested, backend="tpu")
         assert d.impl == "pallas" and d.interpret is False, requested
+        assert d.variant == "mosaic"
     assert dispatch.interpret_default("tpu") is False
 
-    d = dispatch.resolve("auto", backend="gpu")
-    assert d.impl == "reference"
-    d = dispatch.resolve("pallas", backend="gpu")
-    assert d.impl == "pallas" and d.interpret is True
-    assert dispatch.interpret_default("gpu") is True
+    for requested in ("auto", "pallas"):
+        d = dispatch.resolve(requested, backend="gpu")
+        assert d.impl == "pallas" and d.interpret is False, requested
+        assert d.variant == "triton"
     assert dispatch.resolve("reference", backend="tpu").impl == "reference"
+    assert dispatch.resolve("reference", backend="gpu").impl == "reference"
+
+
+def test_resolve_forced_lowerings():
+    """"mosaic"/"triton" force a specific lowering; off its native backend
+    the program runs in the Pallas interpreter (CPU CI equivalence tests),
+    on it the program compiles."""
+    d = dispatch.resolve("triton", backend="cpu")
+    assert (d.impl, d.variant, d.interpret) == ("pallas", "triton", True)
+    d = dispatch.resolve("triton", backend="gpu")
+    assert (d.impl, d.variant, d.interpret) == ("pallas", "triton", False)
+    d = dispatch.resolve("mosaic", backend="gpu")
+    assert (d.impl, d.variant, d.interpret) == ("pallas", "mosaic", True)
+    d = dispatch.resolve("mosaic", backend="tpu")
+    assert (d.impl, d.variant, d.interpret) == ("pallas", "mosaic", False)
+    # forced "pallas" off-accelerator keeps its historical meaning: the
+    # Mosaic program under the interpreter
+    d = dispatch.resolve("pallas", backend="cpu")
+    assert (d.impl, d.variant, d.interpret) == ("pallas", "mosaic", True)
 
 
 def test_unknown_impl_raises():

@@ -1,0 +1,299 @@
+"""Triton-lowered GPU kernel variants + tuning cache.
+
+The forced-``triton`` impl runs the GPU Pallas programs under the
+interpreter on this CPU host — same equivalence bar as the Mosaic kernel
+tests (tolerances copied from test_kernels_flash_attention.py /
+test_kernels_ssd.py; swa_avg stays BITWISE). Tuning-cache resolution is
+unit-tested against a temp cache file: hit -> design applied, miss ->
+deterministic default, malformed entry -> clear error naming the key.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.averaging import StreamingAverage
+from repro.kernels import dispatch, tuning
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.ssd.ops import ssd_scan
+from repro.kernels.swa_avg.ops import running_average
+from repro.kernels.tuning import DEFAULT_DESIGN, DesignPoint
+from repro.models.model import Model
+
+
+# ---------------------------------------------------------------------------
+# flash attention (forced triton, interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def _mk_attn(B, Sq, Skv, H, KVH, D, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D))
+    k = jax.random.normal(ks[1], (B, Skv, KVH, D))
+    v = jax.random.normal(ks[2], (B, Skv, KVH, D))
+    return q, k, v
+
+
+ATTN_SHAPES = [
+    (1, 16, 16, 4, 4, 16),      # MHA tiny
+    (2, 67, 67, 8, 2, 32),      # GQA, ragged seq
+    (2, 128, 128, 4, 1, 64),    # kv=1 (gemma-style)
+    (1, 33, 129, 4, 2, 24),     # cross-length, odd dims
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 16), (False, 0)])
+def test_flash_triton_matches_reference(shape, causal, window):
+    B, Sq, Skv, H, KVH, D = shape
+    q, k, v = _mk_attn(*shape)
+    want = flash_attention(q, k, v, causal=causal, window=window,
+                           impl="reference", chunk=32)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          impl="triton", chunk=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_triton_decode_offset():
+    q, k, v = _mk_attn(2, 1, 64, 8, 4, 32)
+    want = flash_attention(q, k, v, causal=True, q_offset=63,
+                           impl="reference", chunk=16)
+    got = flash_attention(q, k, v, causal=True, q_offset=63, impl="triton",
+                          chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 16), (False, 0)])
+def test_flash_triton_gradients(causal, window):
+    q, k, v = _mk_attn(1, 32, 32, 4, 2, 16)
+
+    def loss(impl):
+        def f(q, k, v):
+            o = flash_attention(q, k, v, causal=causal, window=window,
+                                impl=impl, chunk=16)
+            return jnp.sum(o * o)
+        return jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+
+    for got, want in zip(loss("triton"), loss("reference")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=5e-4, rtol=5e-4)
+
+
+def test_flash_triton_design_pin():
+    """A pinned design point must produce the same numbers (it only
+    re-tiles the same math)."""
+    q, k, v = _mk_attn(1, 48, 48, 4, 2, 16)
+    base = flash_attention(q, k, v, impl="triton")
+    pinned = flash_attention(q, k, v, impl="triton",
+                             design=DesignPoint(32, 16, 8, 3))
+    np.testing.assert_allclose(np.asarray(pinned), np.asarray(base),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd (forced triton, interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def _mk_ssd(B, S, H, P, G, N, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    D = jax.random.normal(ks[5], (H,))
+    return x, dt, A, Bm, Cm, D
+
+
+SSD_SHAPES = [
+    (1, 32, 2, 8, 1, 4),
+    (2, 96, 4, 16, 2, 8),      # grouped B/C
+    (2, 83, 4, 16, 1, 8),      # ragged (chunk padding path)
+    (1, 64, 8, 32, 4, 16),
+]
+
+
+@pytest.mark.parametrize("shape", SSD_SHAPES)
+def test_ssd_triton_matches_reference(shape):
+    x, dt, A, Bm, Cm, D = _mk_ssd(*shape)
+    y0, s0 = ssd_scan(x, dt, A, Bm, Cm, D, impl="reference", chunk=32)
+    y1, s1 = ssd_scan(x, dt, A, Bm, Cm, D, impl="triton", chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s0), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_ssd_triton_gradients():
+    x, dt, A, Bm, Cm, D = _mk_ssd(2, 64, 4, 16, 2, 8)
+
+    def grads(impl):
+        def f(x, dt, A, Bm, Cm, D):
+            y, s = ssd_scan(x, dt, A, Bm, Cm, D, impl=impl, chunk=16)
+            return jnp.sum(y * y) + jnp.sum(s * s)
+        return jax.grad(f, argnums=(0, 1, 2, 3, 4, 5))(x, dt, A, Bm, Cm, D)
+
+    for got, want in zip(grads("triton"), grads("reference")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-3)
+
+
+def test_ssd_triton_init_state_chaining():
+    x, dt, A, Bm, Cm, D = _mk_ssd(1, 64, 2, 8, 1, 4)
+    y_full, s_full = ssd_scan(x, dt, A, Bm, Cm, D, impl="triton", chunk=16)
+    yA, sA = ssd_scan(x[:, :32], dt[:, :32], A, Bm[:, :32], Cm[:, :32], D,
+                      impl="triton", chunk=16)
+    yB, sB = ssd_scan(x[:, 32:], dt[:, 32:], A, Bm[:, 32:], Cm[:, 32:], D,
+                      init_state=sA, impl="triton", chunk=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([yA, yB], 1)),
+                               np.asarray(y_full), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(sB), np.asarray(s_full),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# swa_avg (forced triton, interpret mode — BITWISE)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(17,), (1000, 37), (3, 5, 7), (8192,)])
+def test_swa_triton_bitwise_vs_reference(shape):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    avg = jax.random.normal(k1, shape)
+    w = jax.random.normal(k2, shape)
+    for n in (0.0, 1.0, 7.0):
+        ref = running_average(avg, w, n, impl="reference")
+        tri = running_average(avg, w, n, impl="triton")
+        np.testing.assert_array_equal(np.asarray(tri), np.asarray(ref))
+
+
+def test_swa_triton_bitwise_on_real_bundle():
+    """Same bar as the Mosaic kernel: bitwise equality on every leaf shape
+    of a real model bundle, via StreamingAverage(impl="triton")."""
+    cfg = registry.get_smoke_config("internlm2-1.8b")
+    model = Model(cfg)
+    p1 = model.init(jax.random.PRNGKey(0))
+    p2 = model.init(jax.random.PRNGKey(1))
+
+    ref, tri = StreamingAverage(impl="reference"), StreamingAverage(
+        impl="triton")
+    for p in (p1, p2):
+        ref.add(p)
+        tri.add(p)
+    flat_r = jax.tree_util.tree_flatten_with_path(ref.value())[0]
+    flat_t = jax.tree_util.tree_flatten(tri.value())[0]
+    assert len(flat_r) == len(flat_t) > 5
+    for (path, leaf_r), leaf_t in zip(flat_r, flat_t):
+        np.testing.assert_array_equal(
+            np.asarray(leaf_r), np.asarray(leaf_t),
+            err_msg=f"leaf {jax.tree_util.keystr(path)} "
+                    f"shape {leaf_r.shape}")
+
+
+# ---------------------------------------------------------------------------
+# tuning cache resolution
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def temp_cache(tmp_path, monkeypatch):
+    """Point the tuning module at a writable temp cache file."""
+    path = tmp_path / "tuning_cache.json"
+    monkeypatch.setattr(tuning, "CACHE_PATH", str(path))
+    tuning.clear_cache()
+    yield str(path)
+    tuning.clear_cache()
+
+
+def _write(path, entries):
+    with open(path, "w") as f:
+        json.dump({"version": 1, "entries": entries}, f)
+    tuning.clear_cache()
+
+
+def test_cache_hit_applies_design(temp_cache):
+    _write(temp_cache, {"gpu/flash_attention/skv128_d32": {
+        "block_q": 64, "block_k": 32, "num_warps": 8, "num_stages": 3}})
+    d = dispatch.resolve("auto", backend="gpu", kernel="flash_attention",
+                         shape=(128, 32))
+    assert d.cache_hit
+    assert d.design == DesignPoint(64, 32, 8, 3)
+    # non-pow2 shapes bucket up: skv 100 -> 128, d 25 -> 32
+    d = dispatch.resolve("auto", backend="gpu", kernel="flash_attention",
+                         shape=(100, 25))
+    assert d.cache_hit and d.design == DesignPoint(64, 32, 8, 3)
+
+
+def test_cache_miss_falls_back_to_default(temp_cache):
+    d = dispatch.resolve("auto", backend="gpu", kernel="flash_attention",
+                         shape=(4096, 64))
+    assert not d.cache_hit
+    assert d.design == DEFAULT_DESIGN["flash_attention"]
+    for kernel, shape in (("ssd", (2048, 64)), ("swa_avg", (12345,))):
+        d = dispatch.resolve("auto", backend="gpu", kernel=kernel,
+                             shape=shape)
+        assert not d.cache_hit and d.design == DEFAULT_DESIGN[kernel]
+
+
+def test_malformed_cache_entry_is_a_clear_error(temp_cache):
+    _write(temp_cache, {"gpu/ssd/s64_p16": {
+        "block_q": 0, "block_k": 0, "num_warps": 5, "num_stages": 2}})
+    with pytest.raises(ValueError, match="gpu/ssd/s64_p16"):
+        dispatch.resolve("auto", backend="gpu", kernel="ssd",
+                         shape=(64, 16))
+    _write(temp_cache, {"gpu/ssd/s64_p16": {"block_q": 0}})
+    with pytest.raises(ValueError, match="missing field"):
+        dispatch.resolve("auto", backend="gpu", kernel="ssd",
+                         shape=(64, 16))
+
+
+def test_explicit_design_pin_bypasses_cache(temp_cache):
+    _write(temp_cache, {"gpu/ssd/s64_p16": {
+        "block_q": 0, "block_k": 0, "num_warps": 8, "num_stages": 3}})
+    d = dispatch.resolve("auto", backend="gpu", kernel="ssd",
+                         shape=(64, 16), design=(0, 0, 2, 1))
+    assert not d.cache_hit
+    assert d.design == DesignPoint(0, 0, 2, 1)
+
+
+def test_checked_in_cache_is_valid():
+    data = tuning.load_cache()
+    assert tuning.validate_cache(data) == []
+    assert data.get("entries"), "checked-in tuning cache has no entries"
+
+
+def test_config_validates_impls_and_design_pins():
+    with pytest.raises(ValueError, match="KERNEL_IMPLS|expected one of"):
+        registry.get_smoke_config("internlm2-1.8b")  # warm the registry
+        import dataclasses
+        dataclasses.replace(registry.get_smoke_config("internlm2-1.8b"),
+                            attention_impl="palas")
+    with pytest.raises(ValueError, match="4-tuple"):
+        import dataclasses
+        dataclasses.replace(registry.get_smoke_config("internlm2-1.8b"),
+                            ssd_design=(1, 2))
+    with pytest.raises(ValueError, match="StreamingAverage.impl"):
+        StreamingAverage(impl="cuda")
+
+
+def test_model_config_design_pin_reaches_kernel():
+    """attention_design on the config flows through the attention layer to
+    the kernel (numbers unchanged — a design point only re-tiles)."""
+    import dataclasses
+    cfg = registry.get_smoke_config("internlm2-1.8b")
+    pinned = dataclasses.replace(cfg, attention_impl="triton",
+                                 attention_design=(32, 32, 8, 3))
+    base = dataclasses.replace(cfg, attention_impl="reference")
+    tokens = jnp.arange(2 * 16, dtype=jnp.int32).reshape(2, 16) % cfg.vocab_size
+    model_p, model_b = Model(pinned), Model(base)
+    params = model_b.init(jax.random.PRNGKey(0))
+    want, _ = model_b.apply(params, tokens)
+    got, _ = model_p.apply(params, tokens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
