@@ -6,11 +6,16 @@ Default is the ~100M model (12L x d768, vocab 2048); pass --smoke for a
 
   PYTHONPATH=src python examples/train_lm_swap.py [--smoke] \
       [--arch internlm2-1.8b] [--workers 4] \
-      [--checkpoint-dir ckpts/ --checkpoint-every 20] [--resume]
+      [--checkpoint-dir ckpts/ --checkpoint-every 20] [--resume] \
+      [--mesh worker:4,data:2] [--elastic-deadline 30]
 
 With --checkpoint-dir set, the run snapshots its TrainState every
 --checkpoint-every steps (epoch-aligned); kill it at any point and relaunch
 with --resume to continue bit-exactly from the newest snapshot.
+
+The --mesh/--workers/--elastic-* flag group is the unified
+``repro.dist.DistConfig`` surface (same flags as repro.launch.train; see
+docs/sharding.md).
 """
 import argparse
 
@@ -21,6 +26,7 @@ from repro.configs.base import (ModelConfig, OptimizerConfig, PhaseConfig,
                                 ScheduleConfig, SWAPConfig)
 from repro.core import SWAP, LMAdapter
 from repro.data.pipeline import Loader, make_markov_lm
+from repro.dist.config import DistConfig, add_dist_args
 
 
 def repro_100m() -> ModelConfig:
@@ -36,7 +42,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--arch", default="")
-    ap.add_argument("--workers", type=int, default=4)
+    add_dist_args(ap)
     ap.add_argument("--steps1", type=int, default=200)
     ap.add_argument("--steps2", type=int, default=60)
     ap.add_argument("--seq-len", type=int, default=64)
@@ -49,6 +55,10 @@ def main():
     args = ap.parse_args()
     if args.resume and not args.checkpoint_dir:
         raise SystemExit("--resume requires --checkpoint-dir")
+    dist = DistConfig.from_args(args, n_workers_default=4)
+    dist.initialize()
+    if args.dump_dist_config:
+        dist.to_json(args.dump_dist_config)
 
     if args.arch:
         cfg = registry.get_smoke_config(args.arch)
@@ -70,7 +80,7 @@ def main():
     steps1 = 40 if args.smoke else args.steps1
     steps2 = 15 if args.smoke else args.steps2
     swap_cfg = SWAPConfig(
-        n_workers=args.workers,
+        n_workers=dist.n_workers,
         phase1=PhaseConfig(batch_size=64, max_steps=steps1, stop_accuracy=0.7,
                            precision=args.phase1_precision,
                            grad_accum_steps=args.grad_accum,
@@ -85,7 +95,7 @@ def main():
                                                    total_steps=steps2)),
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every)
-    res = SWAP(adapter, swap_cfg, train, test_loader).run(
+    res = SWAP(adapter, swap_cfg, train, test_loader, dist=dist).run(
         jax.random.PRNGKey(0), resume=args.resume)
     print(f"phase1: {res['phase1_steps']} steps, "
           f"test acc {res['phase1_test_acc']:.4f}")

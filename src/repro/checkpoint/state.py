@@ -85,6 +85,36 @@ def load_train_state(path: str, template: TrainState) -> TrainState:
     return TrainState(**tree)
 
 
+def checkpoint_workers(meta: Dict[str, Any]) -> Optional[int]:
+    """Worker count recorded in a phase-2 snapshot's sidecar meta, or None
+    for pre-elastic snapshots (which implicitly match the resuming config)."""
+    n = meta.get("n_workers")
+    return int(n) if n is not None else None
+
+
+def shrink_worker_axis(state: TrainState, n_workers: int) -> TrainState:
+    """Keep the first ``n_workers`` workers of a phase-2 stacked state.
+
+    Worker-count-aware resume: a checkpoint written by a W-worker run may
+    be resumed by a run configured for W' < W workers (an elastic
+    deployment that lost hosts) — the surviving workers keep their exact
+    trajectories; the dropped tail is discarded. Growing the ensemble
+    (W' > W) is refused: freshly cloned workers would share a trajectory
+    with an existing one, which breaks the independence the phase-2
+    average relies on — restart phase 2 from ``phase1_final`` instead."""
+    ckpt_w = int(np.asarray(state.step).reshape(-1).shape[0])
+    if n_workers == ckpt_w:
+        return state
+    if n_workers > ckpt_w:
+        raise ValueError(
+            f"cannot resume a {ckpt_w}-worker phase-2 checkpoint with "
+            f"n_workers={n_workers}: cloned workers would not be "
+            f"independent. Shrinking (n_workers <= {ckpt_w}) is supported; "
+            f"to grow the ensemble, restart phase 2 from phase1_final.")
+    import jax
+    return jax.tree_util.tree_map(lambda a: a[:n_workers], state)
+
+
 def read_meta(path: str) -> Dict[str, Any]:
     try:
         with open(path + ".json") as f:

@@ -3,19 +3,28 @@
 Algorithm 1, lines 27-28 of the paper:
     θ̂ ← (1/W) Σ θ_w ;  recompute BN statistics for θ̂.
 
-Averaging comes in two forms:
+Averaging comes in three forms:
   * ``average_stacked`` — mean over the leading worker axis (phase 3 proper;
     on the TPU mesh this is a `pmean` over the `worker` axis, emitted by
     GSPMD from the jnp.mean below);
   * ``StreamingAverage`` — running mean folding one model at a time (the SWA
-    baseline and multi-sample SWAP variants; `swa_avg` Pallas kernel on TPU).
+    baseline and multi-sample SWAP variants; `swa_avg` Pallas kernel on TPU);
+  * ``ElasticAverage`` — the deadline-gated elastic variant: the phase-3
+    average is computed from whichever workers REPORT within a deadline
+    (each report folds online into a ``StreamingAverage``; a per-worker
+    liveness mask records who made it), with a straggler timeout that backs
+    off while fewer than ``min_workers`` reported — so a dead or slow
+    worker shrinks the ensemble instead of stalling the run (elastic /
+    asynchronous averaging per Ajroldi et al. "When, Where and Why to
+    Average Weights?"; knobs surface on ``repro.dist.DistConfig``).
 """
 from __future__ import annotations
 
-from typing import Callable, Iterable
+from typing import Callable, Iterable, List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import dispatch
 from repro.kernels.swa_avg import running_average_tree
@@ -67,6 +76,156 @@ class StreamingAverage:
         if self.avg is None:
             raise ValueError("no models folded in yet")
         return self.avg
+
+
+class ElasticAverageError(RuntimeError):
+    """No usable elastic average: fewer than ``min_workers`` workers
+    reported within the fully backed-off deadline."""
+
+
+class ElasticAverage:
+    """Deadline-gated elastic phase-3 averaging with online partial folds.
+
+    Protocol (one averaging round):
+
+      * each worker that finishes phase 2 ``submit``s its parameters with
+        its arrival time (seconds since the round opened). Reports that
+        land within the CURRENT deadline fold immediately into a running
+        ``StreamingAverage`` — the partial average is always ready, a late
+        worker never forces a re-fold of the early ones;
+      * the per-worker liveness ``mask`` records who made the average;
+      * straggler timeout with backoff: while fewer than ``min_workers``
+        workers reported, the deadline extends by ``backoff`` (up to
+        ``max_extensions`` times) instead of failing — a slow-but-alive
+        quorum is preferred over no average;
+      * ``value()`` returns ``(avg_params, mask)`` once at least
+        ``min_workers`` reported, and raises ``ElasticAverageError`` when
+        every worker blew the fully backed-off deadline.
+
+    ``collect(reports)`` drives a whole round from
+    ``(worker, params, arrival_s)`` tuples — the path the SWAP controller
+    uses with simulated arrivals, and the multi-host driver uses with real
+    report timestamps (arrival order, extensions, and the mask come out
+    identical either way because folds are replayed in arrival order).
+
+    The knobs mirror ``repro.dist.DistConfig``: ``elastic_deadline_s``,
+    ``elastic_backoff``, ``elastic_max_extensions``, ``elastic_min_workers``.
+    """
+
+    def __init__(self, n_workers: int, deadline_s: float, *,
+                 backoff: float = 2.0, max_extensions: int = 2,
+                 min_workers: int = 1, impl: str = "auto"):
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+        if deadline_s <= 0:
+            raise ValueError("ElasticAverage needs deadline_s > 0 (use "
+                             "average_stacked for the strict barrier)")
+        if backoff < 1.0:
+            raise ValueError("backoff must be >= 1 (deadlines never shrink)")
+        if not (1 <= min_workers <= n_workers):
+            raise ValueError(f"min_workers must be in [1, {n_workers}], "
+                             f"got {min_workers}")
+        self.n_workers = n_workers
+        self.deadline_s = float(deadline_s)
+        self.backoff = float(backoff)
+        self.max_extensions = int(max_extensions)
+        self.min_workers = int(min_workers)
+        self.mask = np.zeros(n_workers, dtype=bool)
+        self.extensions_used = 0
+        self.stragglers: List[Tuple[int, float]] = []  # (worker, arrival_s)
+        self._stream = StreamingAverage(impl)
+
+    @property
+    def deadline(self) -> float:
+        """The current (possibly backed-off) deadline in seconds."""
+        return self.deadline_s * self.backoff ** self.extensions_used
+
+    @property
+    def n_live(self) -> int:
+        return int(self.mask.sum())
+
+    def extend(self) -> bool:
+        """Back off the deadline once; False when extensions are spent."""
+        if self.extensions_used >= self.max_extensions:
+            return False
+        self.extensions_used += 1
+        return True
+
+    def submit(self, worker: int, params, arrival_s: float) -> bool:
+        """Fold one worker's report if it beat the current deadline.
+        Returns whether it was folded; a missed deadline records the
+        worker as a straggler (its parameters are NOT held)."""
+        if not (0 <= worker < self.n_workers):
+            raise ValueError(f"worker {worker} out of range "
+                             f"[0, {self.n_workers})")
+        if self.mask[worker]:
+            raise ValueError(f"worker {worker} already reported this round")
+        if arrival_s > self.deadline:
+            self.stragglers.append((worker, float(arrival_s)))
+            return False
+        self._stream.add(params)
+        self.mask[worker] = True
+        return True
+
+    def value(self):
+        """(averaged params, liveness mask). Raises ``ElasticAverageError``
+        below the ``min_workers`` quorum."""
+        if self.n_live < self.min_workers:
+            raise ElasticAverageError(
+                f"elastic average has {self.n_live}/{self.n_workers} "
+                f"workers after {self.extensions_used} deadline "
+                f"extension(s) (deadline {self.deadline:g}s, quorum "
+                f"{self.min_workers}); stragglers: "
+                f"{[(w, round(t, 3)) for w, t in self.stragglers]}")
+        return self._stream.value(), self.mask.copy()
+
+    def collect(self, reports: Iterable[Tuple[int, object, float]]):
+        """Run a whole round: fold ``(worker, params, arrival_s)`` reports
+        in arrival order, backing off the deadline whenever a report is
+        late while the quorum is unmet. Workers that never report pass
+        ``arrival_s=float('inf')`` (or are simply absent). Returns
+        ``value()``."""
+        for worker, params, arrival in sorted(reports, key=lambda r: r[2]):
+            # a late report only extends the deadline while the quorum is
+            # short — once min_workers reported, the round is closeable and
+            # stragglers are dropped rather than waited for
+            while (arrival > self.deadline
+                   and self.n_live < self.min_workers and self.extend()):
+                pass
+            self.submit(worker, params, arrival)
+        return self.value()
+
+
+def elastic_average_stacked(stacked_params, dist, worker_arrivals=None,
+                            impl: str = "auto"):
+    """Elastic phase-3 average of an engine-stacked parameter tree.
+
+    Splits the leading worker axis into per-worker reports and folds them
+    through ``ElasticAverage`` under ``dist``'s elastic knobs
+    (``repro.dist.DistConfig``). ``worker_arrivals`` gives each worker's
+    report time in seconds (None = every worker reports instantly;
+    ``float('inf')`` marks a lost worker). Returns
+    ``(avg_params, liveness_mask)``.
+
+    The in-process engine finishes all workers in lockstep, so arrivals
+    here are the *simulation* surface (lost-worker drills, tests, the
+    ``--lost-workers`` launcher flag); the multi-host path feeds real
+    report timestamps through ``ElasticAverage.collect`` directly.
+    """
+    n = int(jax.tree_util.tree_leaves(stacked_params)[0].shape[0])
+    if worker_arrivals is None:
+        worker_arrivals = [0.0] * n
+    if len(worker_arrivals) != n:
+        raise ValueError(f"worker_arrivals has {len(worker_arrivals)} "
+                         f"entries for {n} workers")
+    ea = ElasticAverage(
+        n, dist.elastic_deadline_s, backoff=dist.elastic_backoff,
+        max_extensions=dist.elastic_max_extensions,
+        min_workers=dist.elastic_min_workers, impl=impl)
+    return ea.collect(
+        (w, jax.tree_util.tree_map(lambda a: a[w], stacked_params),
+         float(worker_arrivals[w]))
+        for w in range(n) if not np.isinf(worker_arrivals[w]))
 
 
 def _batch_count(batch) -> int:

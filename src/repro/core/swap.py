@@ -7,10 +7,19 @@ Phase 1: synchronous large-batch SGD until train accuracy >= τ (EMA over
 Phase 2: W independent small-batch workers from the common phase-1 model,
          each with its own data ordering — executed as a *worker-axis
          ensemble*: parameters stacked on a leading W axis and the whole
-         scanned epoch vmapped. On a TPU mesh the W axis is sharded on the
-         `worker` mesh axis so the lowered program has no cross-worker
-         collectives; on CPU the same code runs as a plain vmap.
+         scanned epoch advanced in one program. On a worker mesh the
+         engine lowers SHARDED (``EpochRunner(engine="sharded")``:
+         ``vmap(..., spmd_axis_name="worker")`` with in/out shardings
+         pinned to ``ensemble_shardings``) so the compiled program has no
+         cross-worker collectives and deploys with the worker axis across
+         hosts; without a mesh the same chunk runs as the plain-vmap
+         oracle. ``repro.dist.DistConfig`` selects mesh + engine.
 Phase 3: average the W models; recompute BN statistics (adapter hook).
+         With ``DistConfig.elastic_deadline_s > 0`` the average is ELASTIC:
+         it folds whichever workers report within the deadline
+         (``repro.core.averaging.ElasticAverage`` — online partial folds,
+         per-worker liveness mask, straggler backoff), so a lost worker
+         shrinks the ensemble instead of stalling the run.
 
 Execution runs on the compiled phase engine (``repro.train.loop``): a
 ``TrainState`` (bundle, opt_state, step, accuracy EMA, phase tag, rng)
@@ -32,13 +41,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.state import (
-    Checkpointer, find_resume_point, list_checkpoints, load_train_state,
-    state_step,
+    Checkpointer, checkpoint_workers, find_resume_point, list_checkpoints,
+    load_train_state, shrink_worker_axis, state_step,
 )
 from repro.configs.base import PhaseConfig, SWAPConfig
-from repro.core.averaging import average_stacked
+from repro.core.averaging import average_stacked, elastic_average_stacked
 from repro.core.schedules import schedule_fn as make_schedule
 from repro.data.pipeline import Loader
+from repro.dist.config import DistConfig, resolve_dist
 from repro.dist.sharding import ensemble_shardings
 from repro.train.loop import (
     EpochRunner, TrainState, init_train_state, run_phase, stack_train_state,
@@ -69,17 +79,19 @@ class SGDRun:
     chunks, EMA early-exit at epoch boundaries."""
 
     def __init__(self, adapter, phase: PhaseConfig, train_arrays: Dict,
-                 seed: int = 0):
+                 seed: int = 0, dist: Optional[DistConfig] = None):
         self.adapter = adapter
         self.phase = phase
-        self.loader = Loader(train_arrays, phase.batch_size, seed=seed)
+        self.dist = dist if dist is not None else DistConfig()
+        self.loader = Loader(train_arrays, phase.batch_size, seed=seed,
+                             shard=self.dist.data_shard)
         sched = make_schedule(phase.schedule)
         self.policy = resolve_policy(phase.precision, adapter.opt_cfg)
         self.runner = EpochRunner(
             adapter.make_train_step(sched, policy=self.policy,
                                     grad_accum_steps=phase.grad_accum_steps),
             self.loader, phase.accuracy_ema,
-            unroll=_engine_unroll(adapter))
+            unroll=_engine_unroll(adapter), donate=self.dist.donate_state)
 
     def init_state(self, bundle, opt_state=None, start_step: int = 0,
                    phase_tag: str = "phase1") -> TrainState:
@@ -108,20 +120,32 @@ class SWAP:
     """The full three-phase algorithm over an adapter + dataset."""
 
     def __init__(self, adapter, cfg: SWAPConfig, train_arrays: Dict,
-                 test_loader: Loader, mesh=None):
-        """``mesh``: optional device mesh with a ``worker`` axis (see
-        ``launch.mesh.make_worker_mesh``). When given, the phase-2 stacked
-        TrainState is placed with its leading W axis sharded over ``worker``
-        (``dist.sharding.ensemble_shardings``), so the one vmapped+scanned
-        ensemble program executes as W independent per-worker sub-programs —
-        the paper's no-synchronization property, checked in HLO by
-        ``assert_no_cross_worker_collectives``. Without a mesh the same
-        code runs as a plain single-device vmap."""
+                 test_loader: Loader, mesh=None,
+                 dist: Optional[DistConfig] = None):
+        """``dist``: the unified distribution surface
+        (``repro.dist.DistConfig``) — mesh geometry, phase-2 engine choice,
+        donation policy, elastic-averaging knobs, multi-host layout. With a
+        worker mesh, the phase-2 stacked TrainState is placed with its
+        leading W axis sharded over ``worker``
+        (``dist.sharding.ensemble_shardings``) and the ensemble epoch
+        lowers as ONE sharded-jit program that executes as W independent
+        per-worker sub-programs — the paper's no-synchronization property,
+        checked in HLO by ``assert_no_cross_worker_collectives``. Without a
+        mesh the same code runs as a plain single-device vmap.
+
+        ``mesh=`` is the deprecated pre-DistConfig spelling: it still works
+        for one release (a DistConfig is derived from the mesh geometry)
+        but emits a DeprecationWarning — see ``repro.dist.resolve_dist``."""
         self.adapter = adapter
         self.cfg = cfg
         self.train_arrays = train_arrays
         self.test_loader = test_loader
-        self.mesh = mesh
+        self.dist, self.mesh = resolve_dist(dist, mesh, caller="SWAP")
+        if self.dist.n_workers not in (1, cfg.n_workers) \
+                and self.dist.mesh_shape:
+            raise ValueError(
+                f"DistConfig.n_workers={self.dist.n_workers} disagrees with "
+                f"SWAPConfig.n_workers={cfg.n_workers}")
 
     def _place_ensemble(self, tree):
         if self.mesh is None or "worker" not in self.mesh.axis_names:
@@ -132,8 +156,12 @@ class SWAP:
     # phase 2 state assembly / restore
     # ------------------------------------------------------------------
 
-    def _phase2_init_state(self, bundle, policy) -> TrainState:
-        W = self.cfg.n_workers
+    def _phase2_init_state(self, bundle, policy,
+                           n_workers: Optional[int] = None) -> TrainState:
+        """Fresh stacked phase-2 start state. ``n_workers`` overrides the
+        configured W when building a TEMPLATE matching a checkpoint written
+        by a different-sized run (worker-count-aware resume)."""
+        W = n_workers if n_workers is not None else self.cfg.n_workers
         stacked = _stack_bundles(bundle, W)
         opt_stacked = jax.vmap(self.adapter.init_opt)(stacked)
         return stack_train_state(stacked, opt_stacked, W,
@@ -141,13 +169,22 @@ class SWAP:
                                  scale=policy.init_scale_state())
 
     def run(self, key, collect_curves: bool = False,
-            resume: bool = False, phase2_hooks: Sequence = ()) -> Dict:
+            resume: bool = False, phase2_hooks: Sequence = (),
+            worker_arrivals: Optional[Sequence[float]] = None) -> Dict:
         """``phase2_hooks``: extra epoch-boundary hooks for phase 2, each
         called as ``hook(state, steps_done)`` after every compiled chunk
         (the ``run_phase`` hook surface) — e.g.
         ``repro.serve.publish.WeightPublisher.on_epoch``, which folds the
         across-worker mean into a running average and hot-swaps it into
-        live serving engines. Hooks run before curve collection."""
+        live serving engines. Hooks run before curve collection.
+
+        ``worker_arrivals``: per-worker phase-2 report times in seconds for
+        ELASTIC phase 3 (``DistConfig.elastic_deadline_s > 0``) —
+        ``float('inf')`` marks a lost worker, None means everyone reports
+        instantly. The in-process engine finishes workers in lockstep, so
+        this is the simulation surface (the ``--lost-workers`` launcher
+        flag, tests); multi-host drivers feed real timestamps to
+        ``ElasticAverage.collect`` directly."""
         cfg = self.cfg
         adapter = self.adapter
         results: Dict = {"phase1_log": [], "phase2_curves": []}
@@ -160,7 +197,8 @@ class SWAP:
         # ---------------- phase 1: large batch, synchronous --------------
         t0 = time.perf_counter()
         bundle = adapter.init(key)
-        p1 = SGDRun(adapter, cfg.phase1, self.train_arrays, seed=cfg.seed)
+        p1 = SGDRun(adapter, cfg.phase1, self.train_arrays, seed=cfg.seed,
+                    dist=self.dist)
         if resume_pt is not None and resume_pt["tag"] in ("phase1_final",
                                                           "phase2"):
             # phase 1 finished in a previous process: restore its final
@@ -222,12 +260,22 @@ class SWAP:
                 make_schedule(cfg.phase2.schedule), policy=policy2,
                 grad_accum_steps=cfg.phase2.grad_accum_steps),
             loader2, cfg.phase2.accuracy_ema, ensemble=True,
-            unroll=_engine_unroll(adapter))
+            unroll=_engine_unroll(adapter), mesh=self.mesh,
+            engine=self.dist.resolved_engine(self.mesh),
+            donate=self.dist.donate_state)
 
         state2 = self._phase2_init_state(bundle, policy2)
         prior_t2 = 0.0
         if resume_pt is not None and resume_pt["tag"] == "phase2":
-            state2 = load_train_state(resume_pt["path"], state2)
+            # worker-count-aware resume: the snapshot records its W in the
+            # sidecar meta; load into a template of THAT size, then shrink
+            # the worker axis to this run's W (growing is refused — see
+            # repro.checkpoint.state.shrink_worker_axis)
+            ckpt_w = checkpoint_workers(resume_pt["meta"])
+            template = state2 if ckpt_w in (None, W) \
+                else self._phase2_init_state(bundle, policy2, n_workers=ckpt_w)
+            state2 = shrink_worker_axis(
+                load_train_state(resume_pt["path"], template), W)
             prior_t2 = resume_pt["meta"].get("phase2_train_time", 0.0)
         state2 = self._place_ensemble(state2)
         workers = self._place_ensemble(jnp.arange(W, dtype=jnp.int32))
@@ -260,7 +308,8 @@ class SWAP:
                          chunk_steps=1 if collect_curves else None,
                          checkpointer=ckpt, tag="phase2",
                          checkpoint_meta=lambda tt: {
-                             "phase2_train_time": prior_t2 + tt},
+                             "phase2_train_time": prior_t2 + tt,
+                             "n_workers": W},
                          on_chunk=hooks)
         state2 = res2.state
         results["phase2_steps"] = state_step(state2)
@@ -276,11 +325,24 @@ class SWAP:
             b_w = jax.tree_util.tree_map(lambda a: a[w], state2.bundle)
             worker_accs.append(adapter.eval_accuracy(b_w, self.test_loader))
         results["worker_test_accs"] = worker_accs
-        results["before_avg_test_acc"] = sum(worker_accs) / W
 
         # ---------------- phase 3: average + BN recompute ----------------
         t3 = time.perf_counter()
-        avg_params = average_stacked(state2.bundle["params"])
+        if self.dist.elastic:
+            # deadline-gated: fold whichever workers reported in time; a
+            # lost worker (arrival inf) shrinks the ensemble instead of
+            # stalling the run. The liveness mask scopes every averaged-
+            # model comparison to the workers that actually contributed.
+            avg_params, live_mask = elastic_average_stacked(
+                state2.bundle["params"], self.dist,
+                worker_arrivals=worker_arrivals)
+        else:
+            avg_params = average_stacked(state2.bundle["params"])
+            live_mask = np.ones(W, dtype=bool)
+        results["worker_live_mask"] = [bool(b) for b in live_mask]
+        results["phase2_live_workers"] = int(live_mask.sum())
+        live_accs = [a for a, live in zip(worker_accs, live_mask) if live]
+        results["before_avg_test_acc"] = sum(live_accs) / len(live_accs)
         final = adapter.finalize(avg_params, bn_loader,
                                  cfg.bn_recompute_batches)
         t4 = time.perf_counter()

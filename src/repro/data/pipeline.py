@@ -97,10 +97,24 @@ class Loader:
     each worker walks the full dataset in its own random order — exactly the
     phase-2 sampling model of the paper. The same loader with worker=0
     serves phase 1 (all workers consume the same global batch, sharded).
+
+    ``shard=(index, count)`` is the per-host data sharding used by
+    multi-host launches (``repro.dist.DistConfig`` drives it from
+    ``process_id``/``num_processes``): every host computes the SAME global
+    epoch permutation (it is a pure function of the seed, so no host
+    communication is needed), but each host materializes only its
+    ``batch_size // count`` rows of every global batch — host ``i`` takes
+    the ``i``-th contiguous slice of the permuted batch window. The shards
+    are disjoint and their union is exactly the unsharded batch, in
+    permutation order (asserted in tests/test_data_pipeline.py), so a
+    sharded multi-host step consumes the same global batch as a
+    single-host run. ``steps_per_epoch`` and the augmentation seed stay
+    GLOBAL (identical on every host) — sharding changes which rows a host
+    holds, never the schedule.
     """
 
     def __init__(self, arrays: Dict[str, np.ndarray], batch_size: int,
-                 seed: int = 0):
+                 seed: int = 0, shard: "tuple[int, int] | None" = None):
         self.arrays = {k: jnp.asarray(v) for k, v in arrays.items()}
         sizes = {v.shape[0] for v in arrays.values()}
         if len(sizes) != 1:
@@ -110,6 +124,17 @@ class Loader:
         if batch_size > self.n:
             raise ValueError(
                 f"batch_size {batch_size} exceeds dataset size {self.n}")
+        if shard is not None:
+            index, count = shard
+            if not (0 <= index < count):
+                raise ValueError(f"shard index {index} out of range for "
+                                 f"count {count}")
+            if batch_size % count != 0:
+                raise ValueError(
+                    f"batch_size {batch_size} is not divisible by the "
+                    f"shard count {count} — every host must hold an equal "
+                    f"slice of each global batch")
+        self.shard = shard
         self.batch_size = batch_size
         self.seed = seed
         self.steps_per_epoch = self.n // batch_size
@@ -143,8 +168,16 @@ class Loader:
         """
         epoch = step // self.steps_per_epoch
         offset = (step % self.steps_per_epoch) * self.batch_size
+        local = self.batch_size
+        if self.shard is not None:
+            # host i's contiguous slice of the globally-permuted batch
+            # window; the permutation itself is seed-pure, so every host
+            # agrees on it without communicating
+            index, count = self.shard
+            local = self.batch_size // count
+            offset = offset + index * local
         perm = self._perm(worker, epoch)
-        idx = jax.lax.dynamic_slice_in_dim(perm, offset, self.batch_size)
+        idx = jax.lax.dynamic_slice_in_dim(perm, offset, local)
         out = {k: v[idx] for k, v in self.arrays.items()}
         # deterministic augmentation seed per (seed, worker, step); training
         # losses that augment (CNN) consume it, others ignore it. Computed in

@@ -10,3 +10,9 @@ from repro.dist import compat as _compat
 _compat.install()
 
 from repro.dist import sharding  # noqa: E402,F401
+from repro.dist.config import (  # noqa: E402,F401
+    DistConfig, add_dist_args, parse_mesh, resolve_dist,
+)
+from repro.dist.sharding import (  # noqa: E402,F401
+    assert_no_cross_worker_collectives,
+)

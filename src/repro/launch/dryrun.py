@@ -206,7 +206,8 @@ def roofline_extrapolated(arch: str, shape: ShapeConfig, mesh,
 
 def run_one(arch: str, shape_name: str, mesh_kind: str,
             phase2: bool = False, n_workers: int = 8,
-            precision: str = "float32", grad_accum_steps: int = 1) -> dict:
+            precision: str = "float32", grad_accum_steps: int = 1,
+            phase2_engine: str = "programs") -> dict:
     cfg = registry.get_config(arch)
     if precision not in ("float32", "", "f32", "fp32"):
         # thread the compute dtype through the model's per-matmul casts,
@@ -215,10 +216,15 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
         cfg = dc.replace(
             cfg, dtype=resolve_policy(precision).compute_dtype)
     shape = SHAPES[shape_name]
+    if phase2_engine not in ("programs", "sharded"):
+        raise ValueError(f"phase2_engine must be 'programs' or 'sharded', "
+                         f"got {phase2_engine!r}")
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
            "phase2": phase2, "status": "ok",
            "precision": precision or "float32",
            "grad_accum_steps": grad_accum_steps}
+    if phase2:
+        rec["phase2_engine"] = phase2_engine
     if not shape_applicable(arch, cfg.family, shape):
         rec["status"] = "skipped"
         rec["reason"] = ("full-attention arch: long_500k requires "
@@ -240,20 +246,28 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
     model = Model(cfg)
 
     t0 = time.perf_counter()
-    if phase2:
-        fn, args, block_mesh = _ensemble_jit(model, cfg, shape, mesh,
-                                             n_workers)
-        ctx_mesh = block_mesh
+    if phase2 and phase2_engine == "sharded":
+        # one global sharded-jit program (the production engine lowering)
+        with set_mesh(mesh):
+            lowered, _ = _ensemble_sharded_lower(cfg, shape, mesh, n_workers)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t2 = time.perf_counter()
     else:
-        fn, args = _jit_for_shape(model, cfg, shape, mesh,
-                                  precision=precision,
-                                  grad_accum_steps=grad_accum_steps)
-        ctx_mesh = mesh
-    with set_mesh(ctx_mesh):
-        lowered = fn.lower(*args)
-        t1 = time.perf_counter()
-        compiled = lowered.compile()
-        t2 = time.perf_counter()
+        if phase2:
+            fn, args, block_mesh = _ensemble_jit(model, cfg, shape, mesh,
+                                                 n_workers)
+            ctx_mesh = block_mesh
+        else:
+            fn, args = _jit_for_shape(model, cfg, shape, mesh,
+                                      precision=precision,
+                                      grad_accum_steps=grad_accum_steps)
+            ctx_mesh = mesh
+        with set_mesh(ctx_mesh):
+            lowered = fn.lower(*args)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t2 = time.perf_counter()
 
     ma = compiled.memory_analysis()
     hlo = compiled.as_text()
@@ -310,8 +324,70 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
         rec["phase2_collective_groups_checked"] = n_groups
         rec["phase2_no_cross_worker_collectives"] = True
         rec["phase2_deployment"] = (
+            f"one sharded-jit program, {n_workers} worker blocks x "
+            f"{per_worker} chips"
+            if phase2_engine == "sharded" else
             f"{n_workers} independent programs x {per_worker} chips")
     return rec
+
+
+def _ensemble_sharded_lower(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                            n_workers: int, n_steps: int = 2):
+    """Phase-2 lowered the way the PRODUCTION engine runs it: ONE
+    sharded-jit program over the whole worker mesh —
+    ``EpochRunner(engine="sharded")``, i.e. ``vmap(scan(step),
+    spmd_axis_name="worker")`` with the carried TrainState pinned to
+    ``ensemble_shardings``. ``spmd_axis_name`` stamps the worker axis onto
+    every vmapped intermediate inside the partitioner, which keeps DENSE
+    transformer chunks collective-free (internlm2-1.8b train_4k at 256
+    devices: zero collective groups in the compiled HLO — the weekly CI
+    audit). It does NOT close the MoE scatter/top_k escape the bare-vmap
+    form had (see ``_ensemble_jit``'s history note): granite-moe under
+    this lowering still emits a cross-worker all-reduce, which the
+    downstream audit catches and fails loudly. MoE archs therefore audit
+    (and deploy) via the per-worker-block ``programs`` engine.
+
+    Returns ``(lowered, n_steps)`` — a lowered (not compiled) chunk of
+    ``n_steps`` scanned train steps over a tiny zero-token dataset (the
+    audit is about program STRUCTURE; batch content never matters)."""
+    from repro.core.adapters import LMAdapter
+    from repro.data.pipeline import Loader
+    from repro.train.loop import EpochRunner, TrainState
+    from repro.train.precision import default_scale_state, stack_scale_state
+
+    W = n_workers
+    adapter = LMAdapter(cfg, OptimizerConfig(kind="sgd"))
+    step_fn = adapter.make_train_step(
+        schedule_fn(ScheduleConfig(kind="const")))
+    # per-worker batch = global batch / W (paper: B2 = B1/W); dataset is
+    # n_steps batches so the loader's epoch covers the lowered chunk
+    B = max(shape.global_batch // W, 1)
+    import numpy as np
+    arrays = {"tokens": np.zeros((B * n_steps, shape.seq_len), np.int32),
+              "labels": np.zeros((B * n_steps, shape.seq_len), np.int32)}
+    loader = Loader(arrays, B)
+    runner = EpochRunner(step_fn, loader, 0.9, ensemble=True,
+                         mesh=mesh, engine="sharded")
+
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((W,) + s.shape, s.dtype), tree)
+
+    bundle = jax.eval_shape(adapter.init, jax.random.PRNGKey(0))
+    opt = jax.eval_shape(adapter.init_opt, bundle)
+    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    scale = jax.eval_shape(
+        lambda: stack_scale_state(default_scale_state(), W))
+    i32 = jnp.int32
+    state = TrainState(
+        bundle=stack(bundle), opt_state=stack(opt),
+        step=jax.ShapeDtypeStruct((W,), i32),
+        acc_ema=jax.ShapeDtypeStruct((W,), jnp.float32),
+        phase=jax.ShapeDtypeStruct((W,), i32),
+        rng=jax.ShapeDtypeStruct((W,) + key.shape, key.dtype),
+        scale=scale)
+    worker = jax.ShapeDtypeStruct((W,), i32)
+    return runner.lower_chunk(state, worker, n_steps), n_steps
 
 
 def _ensemble_jit(model: Model, cfg: ModelConfig, shape: ShapeConfig, mesh,
@@ -369,6 +445,13 @@ def main():
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="both")
     ap.add_argument("--phase2", action="store_true")
+    ap.add_argument("--phase2-engine", default="programs",
+                    choices=["programs", "sharded"],
+                    help="phase-2 lowering to audit: per-worker-block "
+                         "independent programs (deployment-shaped, safe "
+                         "for every arch) or the production sharded-jit "
+                         "engine (one global program, "
+                         "vmap+spmd_axis_name with pinned shardings)")
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--precision", default="float32",
                     choices=["float32", "bfloat16"],
@@ -395,6 +478,8 @@ def main():
             for mesh_kind in meshes:
                 key = f"{arch}|{shape}|{mesh_kind}" + \
                     ("|phase2" if args.phase2 else "") + \
+                    ("|sharded" if args.phase2
+                     and args.phase2_engine == "sharded" else "") + \
                     (f"|{args.precision}" if args.precision != "float32"
                      else "") + \
                     (f"|accum{args.grad_accum}" if args.grad_accum > 1
@@ -407,7 +492,8 @@ def main():
                     rec = run_one(arch, shape, mesh_kind, phase2=args.phase2,
                                   n_workers=args.workers,
                                   precision=args.precision,
-                                  grad_accum_steps=args.grad_accum)
+                                  grad_accum_steps=args.grad_accum,
+                                  phase2_engine=args.phase2_engine)
                 except Exception as e:  # noqa: BLE001
                     rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
                            "status": "error", "error": f"{type(e).__name__}: {e}",

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint.io import load_pytree
 from repro.configs import registry
+from repro.dist.config import DistConfig, add_dist_args
 from repro.models.model import Model
 
 
@@ -139,7 +140,8 @@ def follow(model: Model, cfg, params, args) -> dict:
     engine = CompiledServingEngine(
         model, params, max_batch=args.batch, max_seq=max_seq,
         decode_block=args.decode_block, prefill_buckets=[args.prompt_len],
-        kv_layout=args.kv_layout, page_size=args.page_size)
+        kv_layout=args.kv_layout, page_size=args.page_size,
+        dist=args.dist if args.dist.mesh_shape else None)
     follower = PublishFollower(args.follow, template=params)
     upd = follower.poll()
     if upd is not None:                       # seed from the newest publish
@@ -229,7 +231,13 @@ def main():
                          "without a new generation")
     ap.add_argument("--decode-block", type=int, default=4,
                     help="fused decode steps per host call in --follow")
+    add_dist_args(ap)
     args = ap.parse_args()
+    args.dist = DistConfig.from_args(args)
+    args.dist.initialize()
+    if args.dump_dist_config:
+        args.dist.to_json(args.dump_dist_config)
+        print(f"wrote resolved DistConfig to {args.dump_dist_config}")
 
     cfg = (registry.get_config(args.arch) if args.full
            else registry.get_smoke_config(args.arch))

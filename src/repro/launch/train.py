@@ -9,7 +9,8 @@ dry-run). The same controller drives the TPU path: phase 1 on the
       [--full] [--workers 4] [--phase1-steps 150] [--phase2-steps 60] \
       [--stop-acc 0.6] [--optimizer sgd|lars|adamw] [--save out.ckpt] \
       [--phase1-precision bfloat16] [--grad-accum 4] \
-      [--checkpoint-dir ckpts/ --checkpoint-every 50] [--resume]
+      [--checkpoint-dir ckpts/ --checkpoint-every 50] [--resume] \
+      [--mesh worker:4,data:2] [--elastic-deadline 30] [--lost-workers 3]
 
 Large phase-1 batches: --phase1-precision bfloat16 computes the forward/
 backward in bf16 with f32 master weights; --grad-accum k runs each global
@@ -19,6 +20,15 @@ activation memory). See docs/training.md §Precision & accumulation.
 Long jobs: pass --checkpoint-dir/--checkpoint-every for periodic TrainState
 snapshots (epoch-aligned), then relaunch with --resume to continue
 bit-exactly from the newest snapshot — mid-phase-1 or mid-phase-2.
+
+Distribution: the --mesh/--workers/--phase2-engine/--elastic-*/
+--coordinator flag group is the unified ``repro.dist.DistConfig`` surface
+(``--dist-config file.json`` loads one, ``--dump-dist-config`` records the
+resolved config for exact replay); multi-host launches pass
+--coordinator/--num-processes/--process-id per host and each host then
+loads only its shard of every phase-1 batch. --lost-workers simulates
+worker loss for the elastic phase-3 averaging drill (docs/training.md
+§Elastic averaging).
 """
 from __future__ import annotations
 
@@ -35,6 +45,7 @@ from repro.configs.base import (OptimizerConfig, PhaseConfig, ScheduleConfig,
 from repro.core.adapters import LMAdapter
 from repro.core.swap import SWAP
 from repro.data.pipeline import Loader, make_markov_lm
+from repro.dist.config import DistConfig, add_dist_args
 
 
 def main():
@@ -43,7 +54,11 @@ def main():
                     choices=registry.list_archs())
     ap.add_argument("--full", action="store_true",
                     help="use the full (assigned) config instead of smoke")
-    ap.add_argument("--workers", type=int, default=4)
+    add_dist_args(ap)
+    ap.add_argument("--lost-workers", default="",
+                    help="comma-separated worker indices that never report "
+                         "in phase 3 (elastic-averaging drill; needs "
+                         "--elastic-deadline > 0)")
     ap.add_argument("--phase1-steps", type=int, default=150)
     ap.add_argument("--phase2-steps", type=int, default=60)
     ap.add_argument("--phase1-batch", type=int, default=256)
@@ -79,6 +94,20 @@ def main():
     args = ap.parse_args()
     if args.resume and not args.checkpoint_dir:
         raise SystemExit("--resume requires --checkpoint-dir")
+    dist = DistConfig.from_args(args, n_workers_default=4)
+    # multi-host: join the jax.distributed cluster BEFORE any device query
+    dist.initialize()
+    if args.dump_dist_config:
+        dist.to_json(args.dump_dist_config)
+        print(f"wrote resolved DistConfig to {args.dump_dist_config}")
+    lost = [int(w) for w in args.lost_workers.split(",") if w.strip()]
+    if lost and not dist.elastic:
+        raise SystemExit("--lost-workers needs --elastic-deadline > 0 "
+                         "(a strict phase-3 barrier cannot drop workers)")
+    worker_arrivals = None
+    if lost:
+        worker_arrivals = [float("inf") if w in lost else 0.0
+                           for w in range(dist.n_workers)]
 
     cfg = (registry.get_config(args.arch) if args.full
            else registry.get_smoke_config(args.arch))
@@ -101,7 +130,7 @@ def main():
         args.peak_lr, lr_small = 3e-3, 1e-3
     adapter = LMAdapter(cfg, opt)
     swap_cfg = SWAPConfig(
-        n_workers=args.workers,
+        n_workers=dist.n_workers,
         phase1=PhaseConfig(
             batch_size=args.phase1_batch, max_steps=args.phase1_steps,
             stop_accuracy=args.stop_acc,
@@ -120,17 +149,25 @@ def main():
         checkpoint_every=args.checkpoint_every)
 
     n_params = cfg.param_count()
+    swap = SWAP(adapter, swap_cfg, train, test_loader, dist=dist)
     print(f"arch={cfg.name} family={cfg.family} params={n_params/1e6:.1f}M "
-          f"workers={args.workers}")
+          f"workers={dist.n_workers} "
+          f"engine={dist.resolved_engine(swap.mesh)}"
+          + (f" mesh={'x'.join(map(str, dist.mesh_shape))}"
+             if dist.mesh_shape else ""))
     t0 = time.time()
-    res = SWAP(adapter, swap_cfg, train, test_loader).run(
-        jax.random.PRNGKey(args.seed), resume=args.resume)
+    res = swap.run(jax.random.PRNGKey(args.seed), resume=args.resume,
+                   worker_arrivals=worker_arrivals)
     out = {k: v for k, v in res.items()
            if isinstance(v, (int, float, list)) and k != "phase1_log"}
     out["wall_s"] = time.time() - t0
     print(json.dumps({k: v for k, v in out.items()
                       if not isinstance(v, list)}, indent=1))
     print(f"worker accs: {['%.4f' % a for a in res['worker_test_accs']]}")
+    if dist.elastic:
+        print(f"elastic: {res['phase2_live_workers']}/{dist.n_workers} "
+              f"workers in the average, live mask "
+              f"{res['worker_live_mask']}")
     print(f"SWAP: before avg {res['before_avg_test_acc']:.4f} -> "
           f"after avg {res['after_avg_test_acc']:.4f}")
     if args.save:

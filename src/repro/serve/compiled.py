@@ -74,7 +74,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dist.sharding import (batch_shardings, cache_batch_dim,
-                                 cache_shardings, page_pool_dim, path_str)
+                                 cache_shardings, page_pool_dim,
+                                 param_shardings, path_str)
 from repro.models.model import Model
 from repro.serve.engine import Request
 
@@ -145,7 +146,8 @@ class CompiledServingEngine:
                  rng=None, generation: int = 0,
                  kv_layout: str = "auto", page_size: int = 16,
                  n_pages: Optional[int] = None,
-                 kv_cache_dtype: Optional[str] = None):
+                 kv_cache_dtype: Optional[str] = None,
+                 dist=None):
         if sample not in ("greedy", "categorical"):
             raise ValueError(f"unknown sample mode {sample!r}")
         if kv_layout not in ("auto", "paged", "dense"):
@@ -156,6 +158,15 @@ class CompiledServingEngine:
             # in-loop decode writes, pool leaves) quantizes the same way
             model = Model(dataclasses.replace(
                 model.cfg, kv_cache_dtype=kv_cache_dtype))
+        # dist (repro.dist.DistConfig): serving-mesh placement. Params land
+        # by param_spec rules, decode state (cache + slot vectors) by
+        # decode_state_shardings — slots and pool pages on `data`. None
+        # (the default) keeps the single-device layout.
+        self.dist = dist
+        self.mesh = dist.make_mesh() if dist is not None else None
+        if self.mesh is not None:
+            params = jax.device_put(
+                params, param_shardings(self.mesh, params))
         self.model = model
         self.max_batch = max_batch
         self.max_seq = max_seq
@@ -213,6 +224,9 @@ class CompiledServingEngine:
         self._compiled_buckets: set = set()
         self.state = self._empty_state(
             rng if rng is not None else jax.random.PRNGKey(0))
+        if self.mesh is not None:
+            self.state = jax.device_put(
+                self.state, decode_state_shardings(self.mesh, self.state))
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_len: List[int] = [0] * max_batch   # prompt len per slot
         self.slot_buf: List[int] = [0] * max_batch   # pinned param buffer
@@ -637,7 +651,13 @@ class CompiledServingEngine:
 
         # cast to the resident dtypes/shapes so the compiled decode
         # programs are reused as-is (a publish must never recompile)
-        self._buffers[target] = jax.tree_util.tree_map(place, params, ref)
+        placed = jax.tree_util.tree_map(place, params, ref)
+        if self.mesh is not None:
+            # re-pin to the serving mesh: the cast above does not carry the
+            # resident buffer's sharding over to the new generation
+            placed = jax.device_put(placed,
+                                    param_shardings(self.mesh, placed))
+        self._buffers[target] = placed
         self._buf_gen[target] = gen
         self._latest = target
         self._pending = None

@@ -49,8 +49,13 @@ class Request:
 
 class ServingEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 4,
-                 max_seq: int = 256):
+                 max_seq: int = 256, dist=None):
+        # dist (repro.dist.DistConfig) is accepted for surface parity with
+        # CompiledServingEngine but ignored: this engine is the per-step
+        # single-device token-exact oracle — mesh placement belongs to the
+        # compiled engine it validates.
         self.model = model
+        self.dist = dist
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq

@@ -16,7 +16,14 @@ epoch-granular runner:
   * ``EpochRunner`` — compiles ``lax.scan(train_step)`` over an epoch-sized
     chunk inside ONE jit (vmapped over the worker axis for phase 2). Each
     scanned step gathers its batch in-trace via ``Loader.batch_in_trace``,
-    so no per-step host work or host->device transfer remains.
+    so no per-step host work or host->device transfer remains. On a worker
+    mesh the ensemble runner lowers as a SHARDED-JIT program
+    (``engine="sharded"``): ``vmap(..., spmd_axis_name="worker")`` with the
+    in/out state shardings pinned to ``dist.sharding.ensemble_shardings``,
+    so the partitioner carries the worker axis on every vmapped
+    intermediate and the compiled program contains no cross-worker
+    collectives (checked by ``assert_no_cross_worker_collectives``). The
+    plain-vmap form stays as the bitwise equivalence oracle.
   * ``run_phase`` — the thin host driver: one compiled call per epoch,
     early-exit on the accuracy EMA at *epoch boundaries* (the streaming
     equivalent of the paper's per-epoch train-accuracy check), metric-log
@@ -104,8 +111,29 @@ class EpochRunner:
     ``dist.sharding.ensemble_shardings`` on a worker mesh — lowers to W
     independent per-worker sub-programs with no cross-worker collectives.
 
+    ``engine`` picks the ensemble lowering (``repro.dist.DistConfig``
+    resolves it; non-ensemble runners ignore it):
+
+      * ``"vmap"`` (default) — plain ``jax.vmap``; single-device oracle.
+      * ``"sharded"`` — ``jax.vmap(..., spmd_axis_name="worker")`` jitted
+        with ``in_shardings``/``out_shardings`` pinned to
+        ``ensemble_shardings(mesh, ...)``. ``spmd_axis_name`` stamps the
+        worker axis onto every vmapped intermediate inside the partitioner,
+        so per-worker content cannot be re-gathered across workers — the
+        lowering the no-cross-worker-collective audit runs against, and the
+        form a real worker mesh (worker axis across hosts) executes.
+        Requires ``mesh`` with a ``worker`` axis. Bitwise-identical to the
+        ``"vmap"`` engine on the same mesh (asserted in
+        tests/test_sharded_engine.py).
+
+        (``shard_map`` with auto-managed inner axes was tried first and
+        CHECK-crashes XLA's spmd_partitioner on JAX 0.4.37 — see
+        ``launch.dryrun._ensemble_jit``'s history note.)
+
     Compiled programs are cached per chunk length; the input state is
-    donated, so long runs do not accumulate buffers.
+    donated (``donate=False`` — DistConfig.donate_state — keeps the
+    caller's buffers alive instead), so long runs do not accumulate
+    buffers.
 
     ``unroll=True`` emits the chunk as straight-line code instead of an XLA
     ``while`` loop (capped at ``_UNROLL_CAP`` steps to bound compile time).
@@ -120,15 +148,30 @@ class EpochRunner:
     _UNROLL_CAP = 32
 
     def __init__(self, step_fn: Callable, loader: Loader, ema_beta: float,
-                 ensemble: bool = False, unroll: bool = False):
+                 ensemble: bool = False, unroll: bool = False,
+                 mesh=None, engine: str = "vmap", donate: bool = True):
+        if engine not in ("vmap", "sharded"):
+            raise ValueError(f"engine must be 'vmap' or 'sharded', "
+                             f"got {engine!r}")
+        if engine == "sharded":
+            if not ensemble:
+                raise ValueError("engine='sharded' is the ensemble lowering "
+                                 "(worker axis); use ensemble=True")
+            if mesh is None or "worker" not in mesh.axis_names:
+                raise ValueError("engine='sharded' needs a mesh with a "
+                                 "'worker' axis (see DistConfig.make_mesh / "
+                                 "launch.mesh.make_worker_mesh)")
         self.step_fn = step_fn
         self.loader = loader
         self.ema_beta = ema_beta
         self.ensemble = ensemble
         self.unroll = unroll
+        self.mesh = mesh
+        self.engine = engine
+        self.donate = donate
         self._compiled: Dict[int, Callable] = {}
 
-    def _chunk_fn(self, n_steps: int) -> Callable:
+    def _chunk_fn(self, n_steps: int, state=None, worker=None) -> Callable:
         fn = self._compiled.get(n_steps)
         if fn is not None:
             return fn
@@ -154,9 +197,29 @@ class EpochRunner:
                                 unroll=(self.unroll
                                         and n_steps <= self._UNROLL_CAP))
 
-        if self.ensemble:
-            run_chunk = jax.vmap(run_chunk)
-        fn = jax.jit(run_chunk, donate_argnums=(0,))
+        donate = (0,) if self.donate else ()
+        if self.ensemble and self.engine == "sharded":
+            # ONE sharded-jit program: spmd_axis_name pins the worker axis
+            # of every vmapped intermediate in the partitioner, and the
+            # explicit in/out shardings pin the carried state, so nothing
+            # can be re-gathered across worker blocks. Shardings are
+            # derived from the example state/worker (ShapeDtypeStructs
+            # suffice — only shapes matter), whose structure is fixed for
+            # the runner's lifetime.
+            if state is None or worker is None:
+                raise ValueError("sharded engine needs the example state/"
+                                 "worker to derive shardings")
+            from repro.dist.sharding import ensemble_shardings
+            st_sh = ensemble_shardings(self.mesh, state)
+            wk_sh = ensemble_shardings(self.mesh, worker)
+            fn = jax.jit(jax.vmap(run_chunk, spmd_axis_name="worker"),
+                         in_shardings=(st_sh, wk_sh),
+                         out_shardings=(st_sh, None),
+                         donate_argnums=donate)
+        else:
+            if self.ensemble:
+                run_chunk = jax.vmap(run_chunk)
+            fn = jax.jit(run_chunk, donate_argnums=donate)
         self._compiled[n_steps] = fn
         return fn
 
@@ -164,7 +227,13 @@ class EpochRunner:
         """Advance ``n_steps`` inside one compiled call. Returns
         (new_state, metrics) with every metric stacked over the step axis
         (``(n_steps,)`` leaves; ``(W, n_steps)`` for ensembles)."""
-        return self._chunk_fn(n_steps)(state, worker)
+        return self._chunk_fn(n_steps, state, worker)(state, worker)
+
+    def lower_chunk(self, state, worker, n_steps: int):
+        """AOT-lower one chunk without executing it (``state``/``worker``
+        may be ShapeDtypeStructs). The dry-run collective audit lowers the
+        sharded phase-2 engine this way on a 256-fake-device mesh."""
+        return self._chunk_fn(n_steps, state, worker).lower(state, worker)
 
 
 class PhaseResult(NamedTuple):
@@ -221,6 +290,14 @@ def run_phase(runner: EpochRunner, state: TrainState, worker, *,
     ``checkpoint_meta(train_time_so_far) -> dict`` attaches caller metadata
     (e.g. cumulative phase wall/train time, so a later resume can report
     totals instead of remainder-only figures) to each snapshot.
+
+    Mid-chunk entry realigns to epoch boundaries: when ``state.step`` is
+    not a chunk multiple (a phase resumed from a snapshot cut mid-epoch,
+    e.g. by a max_steps cap), the FIRST chunk is truncated to the next
+    boundary. Without this, every post-resume chunk ended mid-epoch, so
+    the stopping check consulted an EMA whose latest fold predates the
+    true epoch boundary — the documented epoch-boundary semantics
+    (docs/training.md) silently shifted by the resume offset.
     """
     if log is not None and runner.ensemble:
         raise ValueError(
@@ -234,8 +311,10 @@ def run_phase(runner: EpochRunner, state: TrainState, worker, *,
     # save) must not train an extra epoch — resume stays bit-exact
     if stop_accuracy is not None and _ema_value(state) >= stop_accuracy:
         return PhaseResult(state, 0, 0.0, 0.0)
+    offset = int(np.asarray(state.step).reshape(-1)[0]) % chunk
+    first = chunk - offset if offset else chunk
     while done < max_steps:
-        n = min(chunk, max_steps - done)
+        n = min(first if done == 0 else chunk, max_steps - done)
         t0 = time.perf_counter()
         state, metrics = runner.run_chunk(state, worker, n)
         jax.block_until_ready(state.bundle)
@@ -244,8 +323,8 @@ def run_phase(runner: EpochRunner, state: TrainState, worker, *,
 
         t1 = time.perf_counter()
         if log is not None:
-            first = int(np.asarray(state.step).reshape(-1)[0]) - n
-            _append_log(log, metrics, first)
+            start = int(np.asarray(state.step).reshape(-1)[0]) - n
+            _append_log(log, metrics, start)
         for hook in hooks:
             hook(state, done)
         if checkpointer is not None:

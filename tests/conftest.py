@@ -40,6 +40,11 @@ def pytest_configure(config):
         "markers",
         "gpu: needs a real GPU (compiled Triton lowering; the interpret-"
         "mode equivalence tests run everywhere) — skipped on CPU hosts")
+    config.addinivalue_line(
+        "markers",
+        "multihost: spawns a 2-process jax.distributed cluster (local TCP "
+        "coordinator) — opt in with REPRO_MULTIHOST=1 (the CI smoke step "
+        "sets it); skipped by default so plain tier-1 runs stay hermetic")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -48,6 +53,10 @@ def pytest_collection_modifyitems(config, items):
         reason=f"requires a real {marker.upper()}; this host runs the XLA "
                f"{backend.upper()} backend")
         for marker in ("tpu", "gpu") if marker != backend}
+    if os.environ.get("REPRO_MULTIHOST") != "1":
+        skips["multihost"] = pytest.mark.skip(
+            reason="2-process jax.distributed smoke; set REPRO_MULTIHOST=1 "
+                   "to run")
     for item in items:
         for marker, skip in skips.items():
             if marker in item.keywords:

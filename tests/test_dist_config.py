@@ -1,0 +1,211 @@
+"""DistConfig (repro.dist.config): the unified distribution surface —
+mesh spec parsing, JSON round-trip, CLI flag resolution, validation, and
+the deprecated ``mesh=`` shim."""
+import argparse
+import json
+
+import jax
+import pytest
+
+from repro.dist.config import (DistConfig, add_dist_args, parse_mesh,
+                               resolve_dist)
+
+
+# ---------------------------------------------------------------------------
+# parse_mesh
+# ---------------------------------------------------------------------------
+
+
+def test_parse_mesh_named():
+    assert parse_mesh("worker:2,data:2,model:2") == (
+        (2, 2, 2), ("worker", "data", "model"))
+    assert parse_mesh("worker:8,data:2") == ((8, 2), ("worker", "data"))
+
+
+def test_parse_mesh_bare_rank_defaults():
+    assert parse_mesh("4") == ((4,), ("data",))
+    assert parse_mesh("4x2") == ((4, 2), ("data", "model"))
+    assert parse_mesh("2x2x2") == ((2, 2, 2), ("worker", "data", "model"))
+    assert parse_mesh("2x2x2x2") == (
+        (2, 2, 2, 2), ("pod", "worker", "data", "model"))
+
+
+def test_parse_mesh_empty_and_errors():
+    assert parse_mesh("") == ((), ())
+    with pytest.raises(ValueError, match="named form"):
+        parse_mesh("2x2x2x2x2")
+    with pytest.raises(ValueError, match="name:size"):
+        parse_mesh("worker:,data:2")
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+
+def test_validation_rejects_bad_configs():
+    with pytest.raises(ValueError, match="equal rank"):
+        DistConfig(mesh_shape=(2, 2), mesh_axes=("worker",))
+    with pytest.raises(ValueError, match="phase2_engine"):
+        DistConfig(phase2_engine="pmap")
+    with pytest.raises(ValueError, match="n_workers"):
+        DistConfig(n_workers=0)
+    with pytest.raises(ValueError, match="backoff"):
+        DistConfig(elastic_backoff=0.5)
+    with pytest.raises(ValueError, match="elastic_min_workers"):
+        DistConfig(n_workers=2, elastic_min_workers=3)
+    with pytest.raises(ValueError, match="coordinator"):
+        DistConfig(num_processes=2)
+    with pytest.raises(ValueError, match="process_id"):
+        DistConfig(num_processes=2, process_id=2,
+                   coordinator="localhost:9999")
+
+
+def test_worker_axis_must_be_outermost():
+    cfg = DistConfig(mesh_shape=(2, 4), mesh_axes=("data", "worker"))
+    with pytest.raises(ValueError, match="outermost"):
+        cfg.make_mesh()
+
+
+# ---------------------------------------------------------------------------
+# derived properties / engine resolution
+# ---------------------------------------------------------------------------
+
+
+def test_resolved_engine_auto():
+    assert DistConfig().resolved_engine() == "vmap"
+    worker = DistConfig(mesh_shape=(4, 2), mesh_axes=("worker", "data"),
+                        n_workers=4)
+    assert worker.resolved_engine() == "sharded"
+    no_worker = DistConfig(mesh_shape=(4, 2), mesh_axes=("data", "model"))
+    assert no_worker.resolved_engine() == "vmap"
+    forced = DistConfig(phase2_engine="vmap", mesh_shape=(4, 2),
+                        mesh_axes=("worker", "data"), n_workers=4)
+    assert forced.resolved_engine() == "vmap"
+
+
+def test_resolved_engine_prefers_runtime_mesh():
+    mesh = jax.make_mesh((4, 2), ("worker", "data"))
+    assert DistConfig().resolved_engine(mesh) == "sharded"
+
+
+def test_data_shard():
+    assert DistConfig().data_shard is None
+    d = DistConfig(coordinator="localhost:9999", num_processes=4,
+                   process_id=2)
+    assert d.data_shard == (2, 4)
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_json_roundtrip(tmp_path):
+    cfg = DistConfig(mesh_shape=(4, 2), mesh_axes=("worker", "data"),
+                     n_workers=4, elastic_deadline_s=30.0,
+                     elastic_min_workers=2, donate_state=False)
+    assert DistConfig.from_json(cfg.to_json()) == cfg
+    path = str(tmp_path / "dist.json")
+    cfg.to_json(path)
+    assert DistConfig.from_json(path) == cfg
+
+
+def test_from_json_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown DistConfig keys"):
+        DistConfig.from_json(json.dumps({"n_workres": 4}))
+
+
+# ---------------------------------------------------------------------------
+# CLI flag surface
+# ---------------------------------------------------------------------------
+
+
+def _parse(argv):
+    ap = argparse.ArgumentParser()
+    add_dist_args(ap)
+    return ap.parse_args(argv)
+
+
+def test_from_args_flags():
+    cfg = DistConfig.from_args(_parse(
+        ["--mesh", "worker:4,data:2", "--workers", "4",
+         "--elastic-deadline", "30", "--elastic-min-workers", "2"]))
+    assert cfg.mesh_shape == (4, 2)
+    assert cfg.mesh_axes == ("worker", "data")
+    assert cfg.n_workers == 4
+    assert cfg.elastic_deadline_s == 30.0
+    assert cfg.elastic_min_workers == 2
+
+
+def test_from_args_defaults():
+    cfg = DistConfig.from_args(_parse([]), n_workers_default=4)
+    assert cfg == DistConfig(n_workers=4)
+
+
+def test_from_args_file_plus_override(tmp_path):
+    """Explicit flags override the --dist-config file; flags left at their
+    parser default defer to it."""
+    path = str(tmp_path / "dist.json")
+    DistConfig(mesh_shape=(4, 2), mesh_axes=("worker", "data"), n_workers=4,
+               elastic_deadline_s=10.0).to_json(path)
+    cfg = DistConfig.from_args(_parse(
+        ["--dist-config", path, "--elastic-deadline", "99"]))
+    assert cfg.mesh_shape == (4, 2)           # from the file
+    assert cfg.n_workers == 4                 # from the file (flag unset)
+    assert cfg.elastic_deadline_s == 99.0     # flag wins
+
+
+# ---------------------------------------------------------------------------
+# resolve_dist: the deprecated mesh= shim
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_dist_mesh_shim_warns_and_works():
+    mesh = jax.make_mesh((4, 2), ("worker", "data"))
+    with pytest.warns(DeprecationWarning, match="mesh=.*deprecated"):
+        dist, out_mesh = resolve_dist(None, mesh, caller="SWAP")
+    assert out_mesh is mesh                   # passed mesh used as-is
+    assert dist.mesh_shape == (4, 2)
+    assert dist.mesh_axes == ("worker", "data")
+    assert dist.n_workers == 4
+
+
+def test_resolve_dist_rejects_both():
+    mesh = jax.make_mesh((4, 2), ("worker", "data"))
+    with pytest.raises(ValueError, match="not both"):
+        resolve_dist(DistConfig(), mesh, caller="SWAP")
+
+
+def test_resolve_dist_neither():
+    dist, mesh = resolve_dist()
+    assert dist == DistConfig() and mesh is None
+
+
+def test_swap_mesh_kwarg_still_works():
+    """The SWAP constructor's old mesh= spelling keeps working for one
+    release behind the DeprecationWarning shim."""
+    from repro.configs import registry
+    from repro.configs.base import (OptimizerConfig, PhaseConfig,
+                                    ScheduleConfig, SWAPConfig)
+    from repro.core.adapters import LMAdapter
+    from repro.core.swap import SWAP
+    from repro.data.pipeline import Loader, make_markov_lm
+
+    cfg = registry.get_smoke_config("internlm2-1.8b")
+    data = make_markov_lm(0, vocab=cfg.vocab_size, n_train=64, n_test=32,
+                          seq_len=8)
+    train = {"tokens": data["train_tokens"], "labels": data["train_labels"]}
+    adapter = LMAdapter(cfg, OptimizerConfig(kind="sgd"))
+    swap_cfg = SWAPConfig(
+        n_workers=4,
+        phase1=PhaseConfig(batch_size=16, max_steps=1,
+                           schedule=ScheduleConfig(kind="const")),
+        phase2=PhaseConfig(batch_size=16, max_steps=1,
+                           schedule=ScheduleConfig(kind="const")))
+    mesh = jax.make_mesh((4, 2), ("worker", "data"))
+    with pytest.warns(DeprecationWarning):
+        s = SWAP(adapter, swap_cfg, train, Loader(train, 32), mesh=mesh)
+    assert s.mesh is mesh
+    assert s.dist.n_workers == 4
+    assert s.dist.resolved_engine(s.mesh) == "sharded"

@@ -1,0 +1,190 @@
+"""Elastic phase-3 averaging (repro.core.averaging.ElasticAverage):
+deadline gating, straggler backoff, liveness masks, quorum failure — and
+the end-to-end SWAP contract that a lost worker shrinks the average
+instead of stalling or poisoning it."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.averaging import (ElasticAverage, ElasticAverageError,
+                                  elastic_average_stacked)
+from repro.dist.config import DistConfig
+
+INF = float("inf")
+
+
+def _params(value):
+    return {"w": jnp.full((3, 2), value, jnp.float32),
+            "b": jnp.full((4,), value * 2, jnp.float32)}
+
+
+def _stacked(values):
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[_params(v) for v in values])
+
+
+def _assert_close(tree, expect):
+    np.testing.assert_allclose(np.asarray(tree["w"]),
+                               np.asarray(expect["w"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(tree["b"]),
+                               np.asarray(expect["b"]), rtol=1e-6)
+
+
+def test_all_on_time_is_plain_mean():
+    ea = ElasticAverage(4, deadline_s=10.0)
+    for w in range(4):
+        assert ea.submit(w, _params(float(w)), arrival_s=1.0)
+    avg, mask = ea.value()
+    _assert_close(avg, _params(1.5))
+    assert mask.all() and mask.shape == (4,)
+
+
+def test_dropped_worker_shrinks_the_average():
+    """A worker that never reports (inf arrival) is excluded: the average
+    is the mean of the LIVE workers, and the mask records who made it."""
+    stacked = _stacked([0.0, 1.0, 2.0, 9.0])
+    dist = DistConfig(n_workers=4, elastic_deadline_s=10.0)
+    avg, mask = elastic_average_stacked(
+        stacked, dist, worker_arrivals=[0.0, 0.0, 0.0, INF])
+    _assert_close(avg, _params(1.0))          # mean of workers 0..2 only
+    assert mask.tolist() == [True, True, True, False]
+
+
+def test_straggler_past_deadline_dropped_once_quorum_met():
+    """With the quorum already satisfied, a late report neither folds nor
+    extends the deadline — stragglers are dropped, not waited for."""
+    stacked = _stacked([1.0, 3.0, 100.0])
+    dist = DistConfig(n_workers=3, elastic_deadline_s=5.0,
+                      elastic_min_workers=2)
+    avg, mask = elastic_average_stacked(
+        stacked, dist, worker_arrivals=[1.0, 2.0, 500.0])
+    _assert_close(avg, _params(2.0))
+    assert mask.tolist() == [True, True, False]
+
+
+def test_backoff_extends_deadline_while_quorum_short():
+    """A late report while the quorum is unmet backs the deadline off
+    (deadline_s * backoff**k) until the report fits — a slow-but-alive
+    quorum beats no average."""
+    stacked = _stacked([1.0, 3.0])
+    dist = DistConfig(n_workers=2, elastic_deadline_s=5.0,
+                      elastic_backoff=2.0, elastic_max_extensions=2,
+                      elastic_min_workers=2)
+    # worker 1 arrives at 18s: misses 5s and 10s, fits the 20s deadline
+    avg, mask = elastic_average_stacked(
+        stacked, dist, worker_arrivals=[1.0, 18.0])
+    _assert_close(avg, _params(2.0))
+    assert mask.tolist() == [True, True]
+
+
+def test_all_late_raises():
+    ea = ElasticAverage(2, deadline_s=1.0, backoff=2.0, max_extensions=1,
+                        min_workers=1)
+    with pytest.raises(ElasticAverageError, match="0/2"):
+        ea.collect([(0, _params(1.0), 99.0), (1, _params(2.0), 99.0)])
+
+
+def test_quorum_failure_reports_stragglers():
+    ea = ElasticAverage(3, deadline_s=1.0, backoff=2.0, max_extensions=0,
+                        min_workers=2)
+    ea.submit(0, _params(1.0), 0.5)
+    ea.submit(1, _params(2.0), 7.0)           # straggler, recorded
+    with pytest.raises(ElasticAverageError, match="1/3"):
+        ea.value()
+
+
+def test_deadline_backoff_schedule():
+    ea = ElasticAverage(4, deadline_s=3.0, backoff=2.0, max_extensions=2)
+    assert ea.deadline == 3.0
+    assert ea.extend() and ea.deadline == 6.0
+    assert ea.extend() and ea.deadline == 12.0
+    assert not ea.extend() and ea.deadline == 12.0   # extensions spent
+
+
+def test_submit_validation():
+    ea = ElasticAverage(2, deadline_s=10.0)
+    ea.submit(0, _params(1.0), 0.0)
+    with pytest.raises(ValueError, match="already reported"):
+        ea.submit(0, _params(1.0), 0.0)
+    with pytest.raises(ValueError, match="out of range"):
+        ea.submit(2, _params(1.0), 0.0)
+    with pytest.raises(ValueError, match="deadline_s"):
+        ElasticAverage(2, deadline_s=0.0)
+
+
+def test_elastic_average_stacked_arrival_length_validated():
+    dist = DistConfig(n_workers=2, elastic_deadline_s=1.0)
+    with pytest.raises(ValueError, match="3 entries for 2 workers"):
+        elastic_average_stacked(_stacked([1.0, 2.0]), dist,
+                                worker_arrivals=[0.0, 0.0, 0.0])
+
+
+def test_swap_run_with_lost_worker():
+    """End-to-end: a 4-worker SWAP run where worker 3 never reports must
+    complete, average only the 3 live workers, and report the liveness
+    mask + live-worker-only before_avg accuracy."""
+    from repro.configs import registry
+    from repro.configs.base import (OptimizerConfig, PhaseConfig,
+                                    ScheduleConfig, SWAPConfig)
+    from repro.core.adapters import LMAdapter
+    from repro.core.swap import SWAP
+    from repro.data.pipeline import Loader, make_markov_lm
+
+    cfg = registry.get_smoke_config("internlm2-1.8b")
+    data = make_markov_lm(0, vocab=cfg.vocab_size, n_train=128, n_test=64,
+                          seq_len=16)
+    train = {"tokens": data["train_tokens"], "labels": data["train_labels"]}
+    test_loader = Loader({"tokens": data["test_tokens"],
+                          "labels": data["test_labels"]}, 32)
+    adapter = LMAdapter(cfg, OptimizerConfig(kind="sgd"))
+    swap_cfg = SWAPConfig(
+        n_workers=4,
+        phase1=PhaseConfig(batch_size=32, max_steps=4,
+                           schedule=ScheduleConfig(kind="const",
+                                                   peak_lr=0.1)),
+        phase2=PhaseConfig(batch_size=16, max_steps=2,
+                           schedule=ScheduleConfig(kind="const",
+                                                   peak_lr=0.05)),
+        bn_recompute_batch_size=64)
+    dist = DistConfig(n_workers=4, elastic_deadline_s=30.0)
+    res = SWAP(adapter, swap_cfg, train, test_loader, dist=dist).run(
+        jax.random.PRNGKey(0), worker_arrivals=[0.0, 0.0, 0.0, INF])
+
+    assert res["worker_live_mask"] == [True, True, True, False]
+    assert res["phase2_live_workers"] == 3
+    live = res["worker_test_accs"][:3]
+    assert res["before_avg_test_acc"] == pytest.approx(sum(live) / 3)
+    assert 0.0 <= res["after_avg_test_acc"] <= 1.0
+
+
+def test_swap_all_workers_live_without_elastic():
+    """The non-elastic path still reports a (full) liveness mask, so result
+    consumers have one schema."""
+    from repro.configs import registry
+    from repro.configs.base import (OptimizerConfig, PhaseConfig,
+                                    ScheduleConfig, SWAPConfig)
+    from repro.core.adapters import LMAdapter
+    from repro.core.swap import SWAP
+    from repro.data.pipeline import Loader, make_markov_lm
+
+    cfg = registry.get_smoke_config("internlm2-1.8b")
+    data = make_markov_lm(0, vocab=cfg.vocab_size, n_train=64, n_test=32,
+                          seq_len=16)
+    train = {"tokens": data["train_tokens"], "labels": data["train_labels"]}
+    test_loader = Loader({"tokens": data["test_tokens"],
+                          "labels": data["test_labels"]}, 32)
+    adapter = LMAdapter(cfg, OptimizerConfig(kind="sgd"))
+    swap_cfg = SWAPConfig(
+        n_workers=2,
+        phase1=PhaseConfig(batch_size=32, max_steps=2,
+                           schedule=ScheduleConfig(kind="const",
+                                                   peak_lr=0.1)),
+        phase2=PhaseConfig(batch_size=16, max_steps=2,
+                           schedule=ScheduleConfig(kind="const",
+                                                   peak_lr=0.05)),
+        bn_recompute_batch_size=32)
+    res = SWAP(adapter, swap_cfg, train, test_loader).run(
+        jax.random.PRNGKey(0))
+    assert res["worker_live_mask"] == [True, True]
+    assert res["phase2_live_workers"] == 2

@@ -1,0 +1,157 @@
+"""2-process ``jax.distributed`` smoke (opt-in: REPRO_MULTIHOST=1).
+
+Spawns a real 2-process cluster over a local TCP coordinator — the
+``DistConfig.initialize`` path — and runs one SWAP phase-2 worker per
+process. XLA's CPU backend cannot execute cross-process computations
+("Multiprocess computations aren't implemented on the CPU backend"), so
+each worker runs as a HOST-LOCAL program — which is exactly phase 2's
+contract (zero cross-worker communication; the sharded-jit lowering is
+audited for that separately in test_sharded_engine.py). The processes
+exchange results the way a real elastic deployment does: filesystem
+reports (params + arrival time) folded by ``ElasticAverage``.
+
+Checks:
+  * ``DistConfig.initialize`` brings up the cluster (process_count == 2,
+    global devices = sum of local devices);
+  * each process's host-local worker chunk is bitwise-identical to the
+    same worker computed in a single process (the oracle);
+  * the parent's elastic fold over the two reports marks both live.
+"""
+import os
+import socket
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Everything model/data-related lives in one module-level recipe string so
+# the child processes and the in-process oracle build EXACTLY the same
+# computation from the same seeds.
+_WORKER_SRC = '''
+import json
+import os
+import sys
+
+# one local CPU device per process; must be set before jax imports
+os.environ["JAX_PLATFORMS"] = "cpu"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=1"
+
+sys.path.insert(0, os.path.join({repo!r}, "src"))
+sys.path.insert(0, os.path.join({repo!r}, "tests"))
+
+from repro.dist.config import DistConfig  # noqa: E402
+
+port, pid, outdir = sys.argv[1], int(sys.argv[2]), sys.argv[3]
+dist = DistConfig(n_workers=2, elastic_deadline_s=30.0,
+                  coordinator="localhost:" + port,
+                  num_processes=2, process_id=pid)
+dist.initialize()            # before any jax device query
+
+import jax  # noqa: E402
+
+assert jax.process_count() == 2, jax.process_count()
+assert jax.device_count() == 2 * jax.local_device_count()
+assert dist.data_shard == (pid, 2)
+
+from repro.checkpoint.io import save_pytree  # noqa: E402
+from test_multihost import run_worker_chunk  # noqa: E402
+
+state = run_worker_chunk(pid)
+save_pytree(os.path.join(outdir, "worker%d.msgpack" % pid),
+            state.bundle["params"])
+with open(os.path.join(outdir, "worker%d.json" % pid), "w") as f:
+    json.dump({{"worker": pid, "arrival_s": float(pid),
+               "step": int(state.step)}}, f)
+'''
+
+
+def _pieces():
+    from repro.configs.base import (ModelConfig, OptimizerConfig,
+                                    ScheduleConfig)
+    from repro.core.adapters import LMAdapter
+    from repro.core.schedules import schedule_fn
+    from repro.data.pipeline import Loader, make_markov_lm
+
+    cfg = ModelConfig(
+        name="tiny-lm", family="dense", n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=2, head_dim=8, d_ff=64, vocab_size=32, attention="gqa",
+        dtype="float32", remat=False, scan_layers=False)
+    adapter = LMAdapter(cfg, OptimizerConfig(kind="sgd"))
+    data = make_markov_lm(0, vocab=cfg.vocab_size, n_train=128, n_test=32,
+                          seq_len=16)
+    train = {"tokens": data["train_tokens"], "labels": data["train_labels"]}
+    loader = Loader(train, 16, seed=3)
+    step_fn = adapter.make_train_step(schedule_fn(
+        ScheduleConfig(kind="const", peak_lr=0.1)))
+    return adapter, loader, step_fn
+
+
+def run_worker_chunk(worker: int):
+    """One epoch of phase-2 worker ``worker`` as a host-local program —
+    shared by the child processes and the single-process oracle."""
+    from repro.train.loop import EpochRunner, init_train_state
+
+    adapter, loader, step_fn = _pieces()
+    bundle = adapter.init(jax.random.PRNGKey(1))
+    state = init_train_state(bundle, adapter.init_opt(bundle),
+                             phase="phase2")
+    runner = EpochRunner(step_fn, loader, 0.9, donate=False)
+    out, _ = runner.run_chunk(state, jnp.asarray(worker, jnp.int32),
+                              loader.steps_per_epoch)
+    jax.block_until_ready(out.bundle)
+    return out
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+@pytest.mark.multihost
+def test_two_process_cluster_smoke(tmp_path):
+    import json
+
+    from repro.checkpoint.io import load_pytree
+    from repro.core.averaging import ElasticAverage
+
+    script = tmp_path / "worker_main.py"
+    script.write_text(_WORKER_SRC.format(repo=REPO))
+    port = str(_free_port())
+    env = {k: v for k, v in os.environ.items()
+           if k not in ("XLA_FLAGS", "JAX_PLATFORMS")}
+
+    procs = [subprocess.Popen(
+        [sys.executable, str(script), port, str(pid), str(tmp_path)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True) for pid in range(2)]
+    outs = [p.communicate(timeout=300)[0] for p in procs]
+    for pid, (p, out) in enumerate(zip(procs, outs)):
+        assert p.returncode == 0, \
+            f"worker process {pid} failed:\n{out}"
+
+    # oracle: the same host-local worker programs in THIS process
+    adapter, _, _ = _pieces()
+    template = adapter.init(jax.random.PRNGKey(1))["params"]
+    reports = []
+    for pid in range(2):
+        got = load_pytree(str(tmp_path / f"worker{pid}.msgpack"), template)
+        want = run_worker_chunk(pid).bundle["params"]
+        for a, b in zip(jax.tree_util.tree_leaves(want),
+                        jax.tree_util.tree_leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        meta = json.loads((tmp_path / f"worker{pid}.json").read_text())
+        assert meta["worker"] == pid
+        reports.append((pid, got, meta["arrival_s"]))
+
+    # the parent folds the filesystem reports exactly like the launcher
+    ea = ElasticAverage(2, deadline_s=30.0)
+    avg, mask = ea.collect(reports)
+    assert mask.tolist() == [True, True]
+    for leaf in jax.tree_util.tree_leaves(avg):
+        assert np.isfinite(np.asarray(leaf)).all()

@@ -7,6 +7,7 @@ periodic snapshots, then copy its checkpoint directory and DELETE every
 snapshot written after the interruption point — exactly the on-disk state a
 killed process would leave — and launch a fresh SWAP with ``resume=True``.
 """
+import dataclasses
 import os
 import shutil
 
@@ -137,9 +138,76 @@ def test_resume_mid_phase2_is_bitwise_identical(task, uninterrupted,
     assert res_b["after_avg_test_acc"] == res_a["after_avg_test_acc"]
 
 
+def test_resume_phase2_with_fewer_workers(task, uninterrupted, tmp_path):
+    """Worker-count-aware resume: a 2-worker phase-2 checkpoint resumed by
+    a 1-worker run keeps worker 0's trajectory (the dropped tail is
+    discarded), and the final average folds only the surviving worker.
+
+    Tolerances, not bitwise: the W=1 and W=2 ensembles are separate XLA
+    compilations whose fusion differs, so the shared trajectory agrees to
+    f32 ulps rather than exactly (same-W resume IS bitwise — asserted
+    above)."""
+    adapter, train, test_loader = task
+    src, res_a = uninterrupted
+    dst = _interrupt_dir(
+        src, str(tmp_path / "shrink"),
+        keep=lambda n: (n.startswith("phase1-")
+                        or n.startswith("phase1_final-")
+                        or n.startswith("phase2-step00000004")))
+    cfg = dataclasses.replace(_swap_cfg(dst), n_workers=1)
+    res_b = SWAP(adapter, cfg, train, test_loader).run(
+        jax.random.PRNGKey(0), resume=True)
+
+    surviving = jax.tree_util.tree_map(lambda a: a[:1],
+                                       res_a["stacked_params"])
+    for a, b in zip(jax.tree_util.tree_leaves(surviving),
+                    jax.tree_util.tree_leaves(res_b["stacked_params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(res_b["worker_test_accs"],
+                               res_a["worker_test_accs"][:1], atol=1e-3)
+
+
+def test_resume_phase2_with_more_workers_refused(task, uninterrupted,
+                                                 tmp_path):
+    """Growing the ensemble on resume is refused: cloned workers would
+    share a trajectory, breaking the independence the average relies on."""
+    adapter, train, test_loader = task
+    src, _ = uninterrupted
+    dst = _interrupt_dir(
+        src, str(tmp_path / "grow"),
+        keep=lambda n: (n.startswith("phase1-")
+                        or n.startswith("phase1_final-")
+                        or n.startswith("phase2-step00000004")))
+    cfg = dataclasses.replace(_swap_cfg(dst), n_workers=3)
+    with pytest.raises(ValueError, match="cloned workers"):
+        SWAP(adapter, cfg, train, test_loader).run(
+            jax.random.PRNGKey(0), resume=True)
+
+
 # ---------------------------------------------------------------------------
 # checkpoint-layer units (no training)
 # ---------------------------------------------------------------------------
+
+
+def test_shrink_worker_axis_units():
+    from repro.checkpoint.state import checkpoint_workers, shrink_worker_axis
+    from repro.train.loop import stack_train_state
+
+    assert checkpoint_workers({"n_workers": 4}) == 4
+    assert checkpoint_workers({}) is None          # pre-elastic sidecar
+
+    bundle = {"params": {"w": jnp.arange(6.0).reshape(3, 2)}, "state": {}}
+    opt = {"mu": {"w": jnp.zeros((3, 2))}}
+    state = stack_train_state(bundle, opt, 3)
+    assert shrink_worker_axis(state, 3) is state   # no-op keeps buffers
+
+    small = shrink_worker_axis(state, 2)
+    _assert_trees_equal(
+        small, jax.tree_util.tree_map(lambda a: a[:2], state))
+
+    with pytest.raises(ValueError, match="cloned workers"):
+        shrink_worker_axis(state, 4)
 
 
 def test_train_state_roundtrip_is_byte_exact(tmp_path):

@@ -139,6 +139,43 @@ def test_early_exit_at_epoch_boundary():
     assert int(np.asarray(res2.state.step)) == loader.steps_per_epoch
 
 
+def test_mid_chunk_entry_realigns_to_epoch_boundaries():
+    """Regression: a phase entered at a non-boundary step (a snapshot cut
+    mid-epoch, e.g. by a max_steps cap) must truncate its FIRST chunk to
+    the next epoch boundary. The old driver ran full-length chunks from
+    the resume offset, so every subsequent 'epoch boundary' — where the
+    EMA stopping check and the on_chunk hooks run — was shifted by the
+    offset for the rest of the phase."""
+    adapter, loader, step_fn = _lm_pieces()
+    spe = loader.steps_per_epoch
+    assert spe == 8
+
+    # a state 3 steps into an epoch, as a mid-chunk snapshot would leave
+    # it (rebuilt per consumer: both engines donate their input buffers)
+    def entry():
+        st, _ = python_loop_reference(step_fn, loader,
+                                      _fresh_state(adapter), n_steps=3,
+                                      ema_beta=0.9)
+        return st
+
+    boundaries = []
+    runner = EpochRunner(step_fn, loader, 0.9)
+    log = []
+    res = run_phase(runner, entry(), 0, max_steps=10, log=log,
+                    on_chunk=lambda st, done: boundaries.append(
+                        int(np.asarray(st.step))))
+    # chunks [5, 5]: the first is truncated to the boundary at step 8
+    assert boundaries == [spe, 13]
+    assert res.steps == 10
+
+    # realignment only reschedules chunk cuts — the trajectory is still
+    # bitwise the uninterrupted one
+    full_state, full_log = python_loop_reference(
+        step_fn, loader, entry(), n_steps=10, ema_beta=0.9)
+    _assert_trees_equal(full_state.bundle, res.state.bundle)
+    _assert_logs_match(full_log, log)
+
+
 def test_worker_identity_changes_data_order():
     """The in-trace gather must honor the traced worker id: two workers
     stepping from identical state diverge (different permutations)."""
