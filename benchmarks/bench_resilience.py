@@ -1,0 +1,171 @@
+"""Resilience overhead + recovery drill: what supervision costs when
+nothing fails, and that a mid-phase-2 worker death actually recovers.
+
+Two measurements:
+
+  * **supervised zero-fault overhead** — the SAME compiled phase run bare
+    (``run_phase``) and under a ``PhaseSupervisor`` with no faults
+    injected. The supervisor's per-chunk health guard (host loss/EMA
+    checks + one jitted all-finite params reduction) is the entire
+    steady-state price of fault tolerance; the tracked floor says it may
+    cost at most ~40% of hot-path throughput (in practice the guard is a
+    single scalar transfer per chunk and the ratio sits near 1.0).
+  * **death recovery drill** — the chaos scenario from
+    ``tests/test_resilience.py`` timed end-to-end: a 4-worker supervised
+    SWAP run where worker 3's heartbeat goes silent mid-phase-2. Tracked
+    is the binary outcome (the run completed, the survivors finished the
+    phase, exactly one recovery event) — a perf-floor on wall time would
+    wobble with runner noise, so time-to-recover is reported but not
+    enforced.
+
+  PYTHONPATH=src python benchmarks/bench_resilience.py --smoke \
+      [--out BENCH_resilience.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+import warnings
+
+import jax
+from common import lm_task
+
+from repro.configs.base import PhaseConfig, ScheduleConfig, SWAPConfig
+from repro.core.swap import SGDRun, SWAP
+from repro.dist.config import DistConfig
+from repro.dist.heartbeat import HeartbeatMonitor, HeartbeatWriter
+from repro.resilience import PhaseSupervisor, SupervisorConfig
+from repro.testing.faults import FakeClock, FaultPlan
+from repro.train.loop import run_phase
+
+
+def bench_overhead(smoke: bool):
+    """(bare_train_s, supervised_train_s, steps) on an identical phase."""
+    steps = 24 if smoke else 96
+    chunk = 2                                  # many chunks -> many guards
+    adapter, train, _ = lm_task(0, n_train=512, n_test=256)
+    phase = PhaseConfig(batch_size=32, max_steps=steps,
+                        schedule=ScheduleConfig(kind="const", peak_lr=0.1))
+    run = SGDRun(adapter, phase, train)
+
+    def fresh():
+        # a fresh bundle per run: the chunk program donates state buffers,
+        # so a shared bundle would be dead after the first pass
+        return run.init_state(adapter.init(jax.random.PRNGKey(0)))
+
+    sup = PhaseSupervisor(SupervisorConfig())
+    # one warm pass each: the chunk program compiles once per runner, the
+    # guard's all-finite reduction once per supervisor pass shape
+    run_phase(run.runner, fresh(), 0, max_steps=steps, chunk_steps=chunk)
+    sup.run_phase(run.runner, fresh(), 0, max_steps=steps, tag="phase1",
+                  chunk_steps=chunk)
+    bare = run_phase(run.runner, fresh(), 0, max_steps=steps,
+                     chunk_steps=chunk)
+    guarded = sup.run_phase(run.runner, fresh(), 0, max_steps=steps,
+                            tag="phase1", chunk_steps=chunk)
+    return bare.train_time, guarded.train_time, steps
+
+
+def bench_death_recovery(smoke: bool):
+    """Wall time of the chaos drill vs its no-fault twin; returns a dict
+    with the completion verdict and the recovery cost in seconds."""
+    phase2_steps = 4 if smoke else 8
+    adapter, train, test_loader = lm_task(0, n_train=128, n_test=256)
+
+    def one_run(inject: bool):
+        tmp = tempfile.mkdtemp(prefix="bench_resilience_")
+        clock = FakeClock()
+        plan = FaultPlan(clock)
+        if inject:
+            plan.kill_worker(3, at_step=phase2_steps // 2)
+        writers = [HeartbeatWriter(f"{tmp}/hb", w, clock=clock)
+                   for w in range(4)]
+        for w in writers:
+            w.beat()
+        monitor = HeartbeatMonitor(f"{tmp}/hb", 4, timeout_s=1.5,
+                                   clock=clock)
+        sup = PhaseSupervisor(SupervisorConfig(max_retries=2),
+                              monitor=monitor, sleep=lambda s: None)
+        cfg = SWAPConfig(
+            n_workers=4,
+            phase1=PhaseConfig(batch_size=32, max_steps=2,
+                               schedule=ScheduleConfig(kind="const",
+                                                       peak_lr=0.1)),
+            phase2=PhaseConfig(batch_size=16, max_steps=phase2_steps,
+                               schedule=ScheduleConfig(kind="const",
+                                                       peak_lr=0.05)),
+            bn_recompute_batch_size=64,
+            checkpoint_dir=f"{tmp}/ckpts", checkpoint_every=1)
+        swap = SWAP(adapter, cfg, train, test_loader,
+                    dist=DistConfig(n_workers=4, elastic_deadline_s=30.0),
+                    supervisor=sup)
+        t0 = time.perf_counter()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            res = swap.run(jax.random.PRNGKey(0), collect_curves=True,
+                           phase2_hooks=[plan.beat_hook(writers)],
+                           heartbeats=monitor)
+        return time.perf_counter() - t0, res
+
+    clean_s, _ = one_run(inject=False)
+    faulted_s, res = one_run(inject=True)
+    events = res["recovery_events"]
+    completed = (res["phase2_steps"] == phase2_steps
+                 and res["phase2_live_workers"] == 3
+                 and res["worker_live_mask"] == [True, True, True, False]
+                 and len(events) == 1 and events[0]["kind"] == "worker_lost")
+    return {
+        "completed": bool(completed),
+        "clean_wall_s": round(clean_s, 3),
+        "faulted_wall_s": round(faulted_s, 3),
+        # restore + replay cost of the one recovery (same process, same
+        # compiled programs — the difference IS the recovery)
+        "time_to_recover_s": round(max(faulted_s - clean_s, 0.0), 3),
+        "survivor_mean_acc": round(res["before_avg_test_acc"], 4),
+        "averaged_acc": round(res["after_avg_test_acc"], 4),
+        "recovery_events": events,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (same config the acceptance bar uses)")
+    ap.add_argument("--out", default="BENCH_resilience.json")
+    args = ap.parse_args()
+
+    bare_s, sup_s, steps = bench_overhead(args.smoke)
+    ratio = bare_s / sup_s if sup_s > 0 else 0.0
+    recovery = bench_death_recovery(args.smoke)
+
+    out = {
+        "config": {"smoke": args.smoke, "overhead_steps": steps,
+                   "backend": jax.default_backend(),
+                   "n_devices": len(jax.devices())},
+        "overhead": {"bare_train_s": round(bare_s, 3),
+                     "supervised_train_s": round(sup_s, 3),
+                     "supervised_overhead_ratio": round(ratio, 3)},
+        "death_recovery": recovery,
+        # consumed by benchmarks/check_regression.py (CI bench job).
+        # supervised_overhead_ratio: bare/supervised hot-path time on a
+        # zero-fault run — the guard may cost at most ~40%. The recovery
+        # drill is pass/fail: a supervised run through a mid-phase-2
+        # worker death must complete with the surviving ensemble.
+        "tracked": {
+            "supervised_overhead_ratio": {"value": round(ratio, 3),
+                                          "floor": 0.6},
+            "death_recovery_completed": {
+                "value": 1.0 if recovery["completed"] else 0.0,
+                "floor": 1.0, "stable": True},
+        },
+    }
+    print(json.dumps(out, indent=1))
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

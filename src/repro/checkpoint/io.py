@@ -6,12 +6,18 @@ round-trips arbitrary nested dict/list pytrees of arrays and scalars.
 from __future__ import annotations
 
 import os
-from typing import Any
+import zlib
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+
+class ChecksumError(ValueError):
+    """Snapshot bytes do not match the checksum recorded in their sidecar
+    (bit rot, torn copy, or out-of-band truncation)."""
 
 
 def _flatten(tree) -> dict:
@@ -40,21 +46,56 @@ def atomic_write(path: str, data: bytes) -> None:
     os.replace(tmp, path)
 
 
+def pack_pytree(tree: Any) -> bytes:
+    """The exact byte payload ``save_pytree`` writes — exposed so callers
+    can checksum the content that will land on disk (msgpack of the same
+    flat map is deterministic, so packing twice yields identical bytes)."""
+    return msgpack.packb(_flatten(tree), use_bin_type=True)
+
+
+def checksum_bytes(data: bytes) -> str:
+    """Content checksum for snapshot payloads, in sidecar string form."""
+    return f"crc32:{zlib.crc32(data) & 0xFFFFFFFF:08x}"
+
+
+def payload_intact(data: bytes) -> bool:
+    """Best-effort integrity probe for LEGACY payloads with no recorded
+    checksum: a truncated msgpack stream fails to unpack. Cannot detect a
+    same-length bit flip — that needs the checksum sidecar."""
+    try:
+        msgpack.unpackb(data, raw=False)
+    except Exception:
+        return False
+    return True
+
+
 def save_pytree(path: str, tree: Any) -> None:
     payload = _flatten(tree)
     atomic_write(path, msgpack.packb(payload, use_bin_type=True))
 
 
-def load_pytree(path: str, template: Any, optional_prefixes: tuple = ()):
+def load_pytree(path: str, template: Any, optional_prefixes: tuple = (),
+                expected_checksum: Optional[str] = None):
     """Restore into the structure of ``template`` (values are replaced).
 
     Leaves whose key starts with one of ``optional_prefixes`` fall back to
     the template's value when the snapshot predates them (forward compat
     for additive TrainState fields — e.g. the loss-scale state); all other
     missing leaves stay a hard error.
+
+    With ``expected_checksum`` (the sidecar's recorded checksum), the raw
+    bytes are verified BEFORE unpacking; a mismatch raises
+    ``ChecksumError`` rather than whatever a corrupt msgpack stream would.
     """
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
+        raw = f.read()
+    if expected_checksum is not None:
+        got = checksum_bytes(raw)
+        if got != expected_checksum:
+            raise ChecksumError(
+                f"checkpoint {path} is corrupt: content checksum {got} != "
+                f"recorded {expected_checksum}")
+    payload = msgpack.unpackb(raw, raw=False)
 
     leaves_paths = jax.tree_util.tree_flatten_with_path(template)[0]
     treedef = jax.tree_util.tree_structure(template)

@@ -36,11 +36,14 @@ from __future__ import annotations
 import json
 import os
 import re
+import warnings
 from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from repro.checkpoint.io import atomic_write, load_pytree, save_pytree
+from repro.checkpoint.io import (ChecksumError, atomic_write, checksum_bytes,
+                                 load_pytree, pack_pytree, payload_intact,
+                                 save_pytree)
 from repro.train.loop import TrainState
 
 _FILE_RE = re.compile(r"^(phase1_final|phase1|phase2)-step(\d+)\.msgpack$")
@@ -65,13 +68,17 @@ def save_train_state(path: str, state: TrainState,
                      meta: Optional[Dict[str, Any]] = None) -> None:
     # sidecar BEFORE the snapshot, both via atomic write-then-rename: the
     # .msgpack is what directory scans key off, so a kill anywhere in here
-    # leaves either a complete (snapshot, meta) pair or nothing visible
-    atomic_write(path + ".json",
-                 json.dumps(meta or {}, indent=1).encode())
-    save_pytree(path, _state_tree(state))
+    # leaves either a complete (snapshot, meta) pair or nothing visible.
+    # The sidecar records the content checksum of the bytes about to land,
+    # so loads (and find_resume_point) can detect out-of-band corruption.
+    tree = _state_tree(state)
+    meta = dict(meta or {}, checksum=checksum_bytes(pack_pytree(tree)))
+    atomic_write(path + ".json", json.dumps(meta, indent=1).encode())
+    save_pytree(path, tree)
 
 
-def load_train_state(path: str, template: TrainState) -> TrainState:
+def load_train_state(path: str, template: TrainState,
+                     verify: bool = True) -> TrainState:
     """Restore a TrainState into the structure/shapes of ``template`` (built
     by the resuming process from the same config — e.g. the freshly stacked
     phase-2 state for a mid-phase-2 restore).
@@ -79,9 +86,17 @@ def load_train_state(path: str, template: TrainState) -> TrainState:
     Snapshots written before the precision subsystem carry no ``scale``
     leaves; those backfill from the template (the policy's initial
     loss-scale state), so old checkpoints stay resumable — bit-exact for
-    f32 runs, where the scale state is a constant."""
+    f32 runs, where the scale state is a constant.
+
+    When the sidecar carries a content checksum (``verify=True``), the
+    snapshot bytes are verified before unpacking; a mismatch raises
+    ``repro.checkpoint.io.ChecksumError``. Legacy snapshots without a
+    recorded checksum load unchecked."""
+    meta = read_meta(path)
+    want = meta.get("checksum") if verify else None
     tree = load_pytree(path, _state_tree(template),
-                       optional_prefixes=("scale/",))
+                       optional_prefixes=("scale/",),
+                       expected_checksum=want)
     return TrainState(**tree)
 
 
@@ -115,12 +130,76 @@ def shrink_worker_axis(state: TrainState, n_workers: int) -> TrainState:
     return jax.tree_util.tree_map(lambda a: a[:n_workers], state)
 
 
+def take_worker_axis(state: TrainState, positions) -> TrainState:
+    """Keep the stacked-state rows at ``positions`` (any subset, any
+    order-preserving selection) — the general form of the elastic shrink.
+    A prefix selection routes through ``shrink_worker_axis`` (the audited
+    resume path, including its refusal to grow); mid-ensemble losses
+    gather the surviving rows. Each kept worker's trajectory is untouched:
+    the row is moved, never mixed."""
+    positions = [int(p) for p in positions]
+    ckpt_w = int(np.asarray(state.step).reshape(-1).shape[0])
+    if any(p < 0 or p >= ckpt_w for p in positions):
+        raise ValueError(f"worker positions {positions} out of range for a "
+                         f"{ckpt_w}-worker stacked state")
+    if len(set(positions)) != len(positions):
+        raise ValueError(f"duplicate worker positions: {positions}")
+    if positions == list(range(len(positions))):
+        return shrink_worker_axis(state, len(positions))
+    import jax
+    import jax.numpy as jnp
+    sel = jnp.asarray(positions, jnp.int32)
+    return jax.tree_util.tree_map(lambda a: jnp.asarray(a)[sel], state)
+
+
+# marker key in the dict read_meta returns for a sidecar that EXISTS but
+# does not parse (mid-write kill before checksums landed, disk damage):
+# such a snapshot is unverifiable and resume-point scans skip it when a
+# verified alternative exists. A MISSING sidecar stays the legacy "no
+# metadata" case ({}), still accepted.
+SIDECAR_CORRUPT = "_sidecar_corrupt"
+
+
 def read_meta(path: str) -> Dict[str, Any]:
     try:
         with open(path + ".json") as f:
-            return json.load(f)
-    except (OSError, json.JSONDecodeError):
+            meta = json.load(f)
+    except OSError:
         return {}
+    except json.JSONDecodeError as e:
+        warnings.warn(f"unreadable checkpoint sidecar {path}.json ({e}); "
+                      f"treating the snapshot as unverifiable",
+                      RuntimeWarning, stacklevel=2)
+        return {SIDECAR_CORRUPT: True}
+    if not isinstance(meta, dict):
+        warnings.warn(f"checkpoint sidecar {path}.json is not a JSON "
+                      f"object; treating the snapshot as unverifiable",
+                      RuntimeWarning, stacklevel=2)
+        return {SIDECAR_CORRUPT: True}
+    return meta
+
+
+def verify_snapshot(path: str, meta: Optional[Dict[str, Any]] = None) -> bool:
+    """Whether a snapshot's bytes are trustworthy enough to restore from.
+
+    * corrupt sidecar → False (the snapshot cannot be tied to a checksum);
+    * sidecar with a checksum → recompute over the file bytes and compare;
+    * legacy snapshot (no sidecar / no checksum key) → accept if the
+      msgpack payload at least unpacks (catches truncation, not bit flips).
+    """
+    if meta is None:
+        meta = read_meta(path)
+    if meta.get(SIDECAR_CORRUPT):
+        return False
+    try:
+        with open(path, "rb") as f:
+            data = f.read()
+    except OSError:
+        return False
+    want = meta.get("checksum")
+    if want is not None:
+        return checksum_bytes(data) == want
+    return payload_intact(data)
 
 
 def list_checkpoints(directory: str) -> List[Dict[str, Any]]:
@@ -142,12 +221,21 @@ def find_resume_point(directory: str) -> Optional[Dict[str, Any]]:
     """The snapshot a resumed run should restart from, or None.
 
     Highest (tag priority, step): the newest phase2 snapshot if any, else
-    phase1_final, else the newest mid-phase-1 snapshot.
+    phase1_final, else the newest mid-phase-1 snapshot. Candidates that
+    fail ``verify_snapshot`` (corrupt/truncated bytes, unparseable sidecar)
+    are skipped with a warning and the previous good snapshot wins — a
+    damaged latest checkpoint costs the steps since the one before it,
+    not the run.
     """
     ckpts = list_checkpoints(directory)
-    if not ckpts:
-        return None
-    return max(ckpts, key=lambda c: (_TAG_ORDER[c["tag"]], c["step"]))
+    for c in sorted(ckpts, key=lambda c: (_TAG_ORDER[c["tag"]], c["step"]),
+                    reverse=True):
+        if verify_snapshot(c["path"], c["meta"]):
+            return c
+        warnings.warn(f"skipping corrupt checkpoint {c['path']} — falling "
+                      f"back to the previous verified snapshot",
+                      RuntimeWarning, stacklevel=2)
+    return None
 
 
 def publish_path(directory: str, generation: int, step: int) -> str:
@@ -168,7 +256,10 @@ def save_publish(directory: str, generation: int, step: int, params,
     path = publish_path(directory, generation, step)
     atomic_write(path + ".json",
                  json.dumps(dict(meta or {}, generation=generation,
-                                 step=step), indent=1).encode())
+                                 step=step,
+                                 checksum=checksum_bytes(
+                                     pack_pytree(params))),
+                            indent=1).encode())
     save_pytree(path, params)
     return path
 
@@ -190,11 +281,19 @@ def list_publishes(directory: str) -> List[Dict[str, Any]]:
 
 
 def find_latest_publish(directory: str) -> Optional[Dict[str, Any]]:
-    """Newest complete publish snapshot, or None. Atomic renames guarantee
-    any listed ``.msgpack`` is complete, so the newest is always safe to
-    load — a publisher killed mid-write is simply not visible yet."""
-    pubs = list_publishes(directory)
-    return pubs[-1] if pubs else None
+    """Newest verified publish snapshot, or None. Atomic renames guarantee
+    any listed ``.msgpack`` is complete as WRITTEN — a publisher killed
+    mid-write is simply not visible yet — but out-of-band damage (bit rot,
+    a torn copy between hosts) can still corrupt a landed file, so each
+    candidate is checksum-verified newest-first and a corrupt generation
+    falls back to the previous good one with a warning."""
+    for pub in reversed(list_publishes(directory)):
+        if verify_snapshot(pub["path"], pub["meta"]):
+            return pub
+        warnings.warn(f"skipping corrupt publish snapshot {pub['path']} — "
+                      f"falling back to the previous generation",
+                      RuntimeWarning, stacklevel=2)
+    return None
 
 
 def load_publish(path: str, template) -> Any:
@@ -221,6 +320,9 @@ class Checkpointer:
         # must not re-snapshot at its first boundary regardless of how far
         # it is from the last durable step
         self._last_saved: Dict[str, int] = {}
+        # paths this process wrote (and therefore knows are good) — lets
+        # _prune's last-good guard skip re-reading them from disk
+        self._verified: set = set()
         if directory:
             os.makedirs(directory, exist_ok=True)
             for c in list_checkpoints(directory):
@@ -234,8 +336,16 @@ class Checkpointer:
              meta: Optional[Dict[str, Any]] = None) -> str:
         step = state_step(state)
         path = self._path(tag, step)
-        save_train_state(path, state, dict(meta or {}, tag=tag, step=step))
+        meta = dict(meta or {}, tag=tag, step=step)
+        # stamp the TRUE worker count from the state's leading axis: after
+        # an elastic mid-phase shrink the caller's static n_workers is
+        # stale, and a later resume would build a wrong-sized template
+        step_arr = np.asarray(state.step)
+        if step_arr.ndim >= 1:
+            meta["n_workers"] = int(step_arr.shape[0])
+        save_train_state(path, state, meta)
         self._last_saved[tag] = step
+        self._verified.add(path)
         self._prune(tag)
         return path
 
@@ -248,13 +358,29 @@ class Checkpointer:
             return None
         return self.save(tag, state, meta)
 
+    def _good(self, entry: Dict[str, Any]) -> bool:
+        return (entry["path"] in self._verified
+                or verify_snapshot(entry["path"], entry["meta"]))
+
     def _prune(self, tag: str) -> None:
         if tag == "phase1_final" or self.keep <= 0:
             return
         mine = [c for c in list_checkpoints(self.directory)
                 if c["tag"] == tag]
-        for stale in mine[:-self.keep]:
-            for p in (stale["path"], stale["path"] + ".json"):
+        stale, kept = mine[:-self.keep], mine[-self.keep:]
+        # never delete the last verified-good snapshot: if nothing in the
+        # kept window verifies (e.g. the newest files were damaged on
+        # disk), spare the newest good one among the would-be-pruned so a
+        # resume always has somewhere to fall back to. Newest-first so the
+        # just-written snapshot (cached in _verified) short-circuits the
+        # scan without touching disk.
+        if stale and not any(self._good(c) for c in reversed(kept)):
+            for c in reversed(stale):
+                if self._good(c):
+                    stale.remove(c)
+                    break
+        for entry in stale:
+            for p in (entry["path"], entry["path"] + ".json"):
                 try:
                     os.remove(p)
                 except OSError:

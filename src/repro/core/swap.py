@@ -121,7 +121,7 @@ class SWAP:
 
     def __init__(self, adapter, cfg: SWAPConfig, train_arrays: Dict,
                  test_loader: Loader, mesh=None,
-                 dist: Optional[DistConfig] = None):
+                 dist: Optional[DistConfig] = None, supervisor=None):
         """``dist``: the unified distribution surface
         (``repro.dist.DistConfig``) — mesh geometry, phase-2 engine choice,
         donation policy, elastic-averaging knobs, multi-host layout. With a
@@ -135,12 +135,22 @@ class SWAP:
 
         ``mesh=`` is the deprecated pre-DistConfig spelling: it still works
         for one release (a DistConfig is derived from the mesh geometry)
-        but emits a DeprecationWarning — see ``repro.dist.resolve_dist``."""
+        but emits a DeprecationWarning — see ``repro.dist.resolve_dist``.
+
+        ``supervisor``: an optional ``repro.resilience.PhaseSupervisor``.
+        With one attached, both phases run under its retry/rollback/
+        dead-worker-recovery state machine — a diverging chunk rolls back
+        to the last verified checkpoint, and (with a heartbeat monitor on
+        the supervisor) a worker that stops beating mid-phase-2 is dropped
+        and the phase resumes with the survivors via the elastic shrink
+        path. Recovery actions are surfaced in
+        ``results["recovery_events"]``."""
         self.adapter = adapter
         self.cfg = cfg
         self.train_arrays = train_arrays
         self.test_loader = test_loader
         self.dist, self.mesh = resolve_dist(dist, mesh, caller="SWAP")
+        self.supervisor = supervisor
         if self.dist.n_workers not in (1, cfg.n_workers) \
                 and self.dist.mesh_shape:
             raise ValueError(
@@ -170,7 +180,8 @@ class SWAP:
 
     def run(self, key, collect_curves: bool = False,
             resume: bool = False, phase2_hooks: Sequence = (),
-            worker_arrivals: Optional[Sequence[float]] = None) -> Dict:
+            worker_arrivals: Optional[Sequence[float]] = None,
+            heartbeats=None, phase2_chunk_filter=None) -> Dict:
         """``phase2_hooks``: extra epoch-boundary hooks for phase 2, each
         called as ``hook(state, steps_done)`` after every compiled chunk
         (the ``run_phase`` hook surface) — e.g.
@@ -184,10 +195,33 @@ class SWAP:
         instantly. The in-process engine finishes workers in lockstep, so
         this is the simulation surface (the ``--lost-workers`` launcher
         flag, tests); multi-host drivers feed real timestamps to
-        ``ElasticAverage.collect`` directly."""
+        ``ElasticAverage.collect`` directly.
+
+        ``heartbeats``: an optional ``repro.dist.heartbeat.
+        HeartbeatMonitor``. With elastic averaging on, phase-3 arrivals
+        come from REAL beacon staleness at averaging time (overriding any
+        simulated ``worker_arrivals``) — a stale worker arrives late or
+        inf and is backed off / dropped exactly like a simulated one.
+
+        ``phase2_chunk_filter``: a ``(state, metrics) -> (state, metrics)``
+        transform applied to what each compiled phase-2 chunk surfaces,
+        BEFORE the supervisor's health guard — the fault-injection seam
+        (``repro.testing.faults.FaultPlan.chunk_filter``). Requires a
+        supervisor: unsupervised runs have no guard to observe the fault,
+        so accepting the filter there would silently train on it."""
         cfg = self.cfg
         adapter = self.adapter
-        results: Dict = {"phase1_log": [], "phase2_curves": []}
+        results: Dict = {"phase1_log": [], "phase2_curves": [],
+                         "recovery_events": []}
+
+        def _supervised(runner, state, worker, **kw):
+            res = self.supervisor.run_phase(runner, state, worker, **kw)
+            results["recovery_events"].extend(
+                {"kind": e.kind, "attempt": e.attempt, "tag": e.tag,
+                 "error": e.error, "restored_step": e.restored_step,
+                 "restored_from": e.restored_from,
+                 "lost_workers": list(e.lost_workers)} for e in res.events)
+            return res
 
         ckpt = Checkpointer(cfg.checkpoint_dir, cfg.checkpoint_every) \
             if cfg.checkpoint_dir else None
@@ -223,13 +257,15 @@ class SWAP:
                 # pre-interrupt wall time, so reported phase1_time stays
                 # consistent with the cumulative phase1_steps
                 prior_t1 = resume_pt["meta"].get("phase1_time", 0.0)
-            res1 = run_phase(
-                p1.runner, state1, 0,
+            phase1_kw = dict(
                 max_steps=cfg.phase1.max_steps - int(np.asarray(state1.step)),
                 stop_accuracy=cfg.phase1.stop_accuracy,
                 log=results["phase1_log"], checkpointer=ckpt, tag="phase1",
                 checkpoint_meta=lambda tt: {
                     "phase1_time": prior_t1 + time.perf_counter() - t0})
+            res1 = _supervised(p1.runner, state1, 0, **phase1_kw) \
+                if self.supervisor is not None \
+                else run_phase(p1.runner, state1, 0, **phase1_kw)
             state1 = res1.state
             bundle = state1.bundle
             results["phase1_steps"] = int(np.asarray(state1.step))
@@ -290,11 +326,14 @@ class SWAP:
                 avg_now = adapter.finalize(
                     average_stacked(state.bundle["params"]), bn_loader,
                     cfg.bn_recompute_batches)
+                # worker count read off the state: a supervised run may
+                # have shrunk the ensemble mid-phase
+                n_live = int(np.asarray(state.step).reshape(-1).shape[0])
                 accs: List[float] = [
                     adapter.eval_accuracy(
                         jax.tree_util.tree_map(lambda a: a[w], state.bundle),
                         self.test_loader, max_batches=2)
-                    for w in range(W)]
+                    for w in range(n_live)]
                 results["phase2_curves"].append({
                     "step": state_step(state) - 1,
                     "worker_test_accs": accs,
@@ -303,15 +342,32 @@ class SWAP:
 
             hooks.append(curve_hook)
 
-        res2 = run_phase(runner2, state2, workers,
-                         max_steps=cfg.phase2.max_steps - state_step(state2),
-                         chunk_steps=1 if collect_curves else None,
-                         checkpointer=ckpt, tag="phase2",
-                         checkpoint_meta=lambda tt: {
-                             "phase2_train_time": prior_t2 + tt,
-                             "n_workers": W},
-                         on_chunk=hooks)
+        phase2_kw = dict(
+            max_steps=cfg.phase2.max_steps - state_step(state2),
+            chunk_steps=1 if collect_curves else None,
+            checkpointer=ckpt, tag="phase2",
+            checkpoint_meta=lambda tt: {
+                "phase2_train_time": prior_t2 + tt,
+                "n_workers": W},
+            on_chunk=hooks)
+        if self.supervisor is not None:
+            res2 = _supervised(runner2, state2, workers,
+                               place=self._place_ensemble,
+                               chunk_filter=phase2_chunk_filter, **phase2_kw)
+            workers = res2.worker
+        elif phase2_chunk_filter is not None:
+            raise ValueError(
+                "phase2_chunk_filter needs a supervisor attached "
+                "(SWAP(..., supervisor=...)): without one, no guard "
+                "observes the injected fault")
+        else:
+            res2 = run_phase(runner2, state2, workers, **phase2_kw)
         state2 = res2.state
+        # surviving ensemble: the stacked leading axis after any mid-phase
+        # recovery shrink, with original worker identities preserved
+        W_live = int(np.asarray(state2.step).reshape(-1).shape[0])
+        worker_ids = [int(x) for x in np.asarray(workers).reshape(-1)]
+        results["phase2_worker_ids"] = worker_ids
         results["phase2_steps"] = state_step(state2)
         # train time only (cumulative across resumes) — curve eval /
         # checkpoint time is reported separately so the paper's speed claim
@@ -319,9 +375,10 @@ class SWAP:
         results["phase2_time"] = prior_t2 + res2.train_time
         results["phase2_eval_time"] = res2.hook_time
 
-        # per-worker test accuracy BEFORE averaging (paper's row 3)
+        # per-worker test accuracy BEFORE averaging (paper's row 3),
+        # indexed by stacked position (worker_ids maps position → identity)
         worker_accs = []
-        for w in range(W):
+        for w in range(W_live):
             b_w = jax.tree_util.tree_map(lambda a: a[w], state2.bundle)
             worker_accs.append(adapter.eval_accuracy(b_w, self.test_loader))
         results["worker_test_accs"] = worker_accs
@@ -333,14 +390,30 @@ class SWAP:
             # lost worker (arrival inf) shrinks the ensemble instead of
             # stalling the run. The liveness mask scopes every averaged-
             # model comparison to the workers that actually contributed.
+            # With a heartbeat monitor, arrivals are real beacon staleness
+            # at averaging time (staleness-as-lateness) — the simulated
+            # worker_arrivals surface only drives heartbeat-less runs.
+            if heartbeats is not None:
+                worker_arrivals = heartbeats.arrivals(worker_ids)
+            elif worker_arrivals is not None and W_live != W \
+                    and len(worker_arrivals) == W:
+                # simulated arrivals are per ORIGINAL worker id; realign to
+                # the survivors' stacked positions
+                worker_arrivals = [worker_arrivals[wid] for wid in worker_ids]
             avg_params, live_mask = elastic_average_stacked(
                 state2.bundle["params"], self.dist,
                 worker_arrivals=worker_arrivals)
         else:
             avg_params = average_stacked(state2.bundle["params"])
-            live_mask = np.ones(W, dtype=bool)
-        results["worker_live_mask"] = [bool(b) for b in live_mask]
-        results["phase2_live_workers"] = int(live_mask.sum())
+            live_mask = np.ones(W_live, dtype=bool)
+        # report liveness over the ORIGINAL configured ensemble: a worker
+        # dropped by mid-phase recovery is dead, a surviving position maps
+        # back to its identity
+        full_mask = [False] * W
+        for pos, wid in enumerate(worker_ids):
+            full_mask[wid] = bool(live_mask[pos])
+        results["worker_live_mask"] = full_mask
+        results["phase2_live_workers"] = int(sum(full_mask))
         live_accs = [a for a, live in zip(worker_accs, live_mask) if live]
         results["before_avg_test_acc"] = sum(live_accs) / len(live_accs)
         final = adapter.finalize(avg_params, bn_loader,

@@ -109,6 +109,12 @@ class DistConfig:
     num_processes: int = 1
     process_id: int = 0
 
+    # heartbeat liveness ("" = disabled: elastic arrivals stay
+    # caller-supplied / simulated). See repro.dist.heartbeat.
+    heartbeat_dir: str = ""
+    heartbeat_interval_s: float = 0.0  # min spacing between beats
+    heartbeat_timeout_s: float = 0.0   # staleness = dead; 0 derives below
+
     def __post_init__(self):
         if len(self.mesh_shape) != len(self.mesh_axes):
             raise ValueError(
@@ -139,6 +145,17 @@ class DistConfig:
         if self.num_processes > 1 and not self.coordinator:
             raise ValueError("multi-host (num_processes > 1) needs a "
                              "coordinator address ('host:port')")
+        if self.heartbeat_interval_s < 0:
+            raise ValueError("heartbeat_interval_s must be >= 0")
+        if self.heartbeat_timeout_s < 0:
+            raise ValueError("heartbeat_timeout_s must be >= 0")
+        if (self.heartbeat_timeout_s > 0 and self.heartbeat_interval_s > 0
+                and self.heartbeat_timeout_s < self.heartbeat_interval_s):
+            raise ValueError(
+                f"heartbeat_timeout_s ({self.heartbeat_timeout_s}) must be "
+                f">= heartbeat_interval_s ({self.heartbeat_interval_s}): a "
+                f"timeout shorter than the beat spacing declares every "
+                f"worker dead between beats")
 
     # ------------------------------------------------------------------
     # derived properties
@@ -151,6 +168,21 @@ class DistConfig:
     @property
     def multihost(self) -> bool:
         return self.num_processes > 1
+
+    @property
+    def heartbeats(self) -> bool:
+        return bool(self.heartbeat_dir)
+
+    @property
+    def resolved_heartbeat_timeout(self) -> float:
+        """Liveness timeout in seconds: the explicit knob, else 3 beat
+        intervals (one missed beat is a hiccup, three is a death), else a
+        30s default for interval-less (beat-every-boundary) setups."""
+        if self.heartbeat_timeout_s > 0:
+            return self.heartbeat_timeout_s
+        if self.heartbeat_interval_s > 0:
+            return 3.0 * self.heartbeat_interval_s
+        return 30.0
 
     @property
     def has_worker_axis(self) -> bool:
@@ -284,6 +316,12 @@ class DistConfig:
             kw["num_processes"] = args.num_processes
         if args.process_id is not None:
             kw["process_id"] = args.process_id
+        if args.heartbeat_dir is not None:
+            kw["heartbeat_dir"] = args.heartbeat_dir
+        if args.heartbeat_interval is not None:
+            kw["heartbeat_interval_s"] = args.heartbeat_interval
+        if args.heartbeat_timeout is not None:
+            kw["heartbeat_timeout_s"] = args.heartbeat_timeout
         return cls(**kw)
 
 
@@ -327,6 +365,18 @@ def add_dist_args(parser) -> None:
                    help="total jax.distributed processes (multi-host)")
     g.add_argument("--process-id", type=int, default=None,
                    help="this process's jax.distributed index (multi-host)")
+    g.add_argument("--heartbeat-dir", default=None, metavar="DIR",
+                   help="shared directory for per-worker heartbeat beacons "
+                        "(repro.dist.heartbeat); enables real liveness in "
+                        "place of simulated elastic arrivals")
+    g.add_argument("--heartbeat-interval", type=float, default=None,
+                   metavar="SECONDS",
+                   help="minimum spacing between heartbeats (0 = beat at "
+                        "every chunk boundary)")
+    g.add_argument("--heartbeat-timeout", type=float, default=None,
+                   metavar="SECONDS",
+                   help="beacon staleness that declares a worker dead "
+                        "(0 = 3x the interval, or 30s)")
 
 
 def resolve_dist(dist: Optional[DistConfig] = None, mesh=None, *,

@@ -1,0 +1,179 @@
+"""File-based per-worker heartbeat liveness.
+
+The elastic phase-3 machinery (``repro.core.averaging.ElasticAverage``)
+consumes per-worker *arrival* timestamps: how late each worker's
+contribution is relative to the averaging deadline. PR 9 fed it simulated
+arrivals (``launch.train --lost-workers``); this module supplies real
+ones, using the same medium the multi-host result exchange already uses —
+the filesystem (``tests/test_multihost.py``): shared-filesystem clusters
+are exactly the deployments this repo's ``jax.distributed`` path targets,
+and files need no extra coordinator process.
+
+Protocol
+--------
+Each worker (or host, in the one-writer-per-host deployment) atomically
+rewrites a single beacon file ``hb-worker<N>.json`` at chunk boundaries:
+
+    {"worker": N, "seq": k, "t": <clock seconds>, "step": <train step>}
+
+``atomic_write`` (write-then-rename) guarantees a monitor never reads a
+torn beacon. The monitor derives everything from beacon staleness at poll
+time:
+
+  * **live mask** — a worker is live iff its beacon exists and is no
+    staler than ``timeout_s``;
+  * **elastic arrivals** — a live worker's arrival is its staleness
+    (``now - last beat``): a prompt worker arrives ~0, a slow-but-alive
+    one arrives late enough to exercise the deadline backoff, and a dead
+    one (stale beyond ``timeout_s`` or never seen) arrives ``inf`` and is
+    dropped from the average.
+
+Both sides take an injectable ``clock`` so the chaos suite
+(``repro.testing.faults.FakeClock``) can script deterministic timelines —
+no sleeps-as-synchronization anywhere.
+
+Knobs live on ``DistConfig``: ``heartbeat_dir`` (enables the subsystem),
+``heartbeat_interval_s`` (min spacing between beats), and
+``heartbeat_timeout_s`` (staleness that declares a worker dead; 0 derives
+3x the interval). See docs/resilience.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.checkpoint.io import atomic_write
+
+_INF = float("inf")
+
+
+def heartbeat_path(directory: str, worker: int) -> str:
+    return os.path.join(directory, f"hb-worker{int(worker)}.json")
+
+
+class HeartbeatWriter:
+    """One worker's beacon. ``beat`` always writes; ``maybe_beat`` respects
+    ``interval_s`` so chunk-boundary hooks on fast chunks don't hammer the
+    shared filesystem."""
+
+    def __init__(self, directory: str, worker: int,
+                 interval_s: float = 0.0,
+                 clock: Callable[[], float] = time.monotonic):
+        if interval_s < 0:
+            raise ValueError(f"interval_s must be >= 0, got {interval_s}")
+        self.directory = directory
+        self.worker = int(worker)
+        self.interval_s = float(interval_s)
+        self.clock = clock
+        self.seq = 0
+        self._last_beat: Optional[float] = None
+        os.makedirs(directory, exist_ok=True)
+
+    @property
+    def path(self) -> str:
+        return heartbeat_path(self.directory, self.worker)
+
+    def beat(self, step: Optional[int] = None) -> None:
+        now = float(self.clock())
+        self.seq += 1
+        atomic_write(self.path, json.dumps(
+            {"worker": self.worker, "seq": self.seq, "t": now,
+             "step": None if step is None else int(step)}).encode())
+        self._last_beat = now
+
+    def maybe_beat(self, step: Optional[int] = None) -> bool:
+        now = float(self.clock())
+        if (self._last_beat is not None
+                and now - self._last_beat < self.interval_s):
+            return False
+        self.beat(step)
+        return True
+
+
+class HeartbeatMonitor:
+    """Reads every worker's beacon and turns staleness into liveness and
+    elastic arrivals. Stateless between polls apart from the directory —
+    a monitor can come up after a crash and immediately see the truth."""
+
+    def __init__(self, directory: str, n_workers: int, timeout_s: float,
+                 clock: Callable[[], float] = time.monotonic):
+        if n_workers <= 0:
+            raise ValueError(f"n_workers must be positive, got {n_workers}")
+        if timeout_s <= 0:
+            raise ValueError(f"timeout_s must be positive, got {timeout_s}")
+        self.directory = directory
+        self.n_workers = int(n_workers)
+        self.timeout_s = float(timeout_s)
+        self.clock = clock
+
+    def poll(self) -> Dict[int, Optional[dict]]:
+        """Latest beacon per worker id (None: never beat / unreadable).
+        A torn or half-written beacon is impossible by construction
+        (atomic_write), but a beacon damaged out-of-band reads as absent
+        rather than crashing the monitor."""
+        out: Dict[int, Optional[dict]] = {}
+        for w in range(self.n_workers):
+            try:
+                with open(heartbeat_path(self.directory, w)) as f:
+                    rec = json.load(f)
+                out[w] = rec if isinstance(rec, dict) else None
+            except (OSError, json.JSONDecodeError):
+                out[w] = None
+        return out
+
+    def staleness(self, now: Optional[float] = None) -> List[float]:
+        """Seconds since each worker's last beat (inf: never seen)."""
+        now = float(self.clock()) if now is None else float(now)
+        beacons = self.poll()
+        out = []
+        for w in range(self.n_workers):
+            rec = beacons[w]
+            if rec is None or "t" not in rec:
+                out.append(_INF)
+            else:
+                out.append(max(0.0, now - float(rec["t"])))
+        return out
+
+    def live_mask(self, now: Optional[float] = None) -> np.ndarray:
+        """Boolean (n_workers,): live iff staleness <= timeout_s."""
+        stale = self.staleness(now)
+        return np.asarray([s <= self.timeout_s for s in stale], bool)
+
+    def dead_among(self, workers: Sequence[int],
+                   now: Optional[float] = None) -> List[int]:
+        """The subset of ``workers`` currently past the liveness timeout."""
+        mask = self.live_mask(now)
+        return [int(w) for w in workers if not mask[int(w)]]
+
+    def arrivals(self, workers: Optional[Sequence[int]] = None,
+                 now: Optional[float] = None) -> List[float]:
+        """Elastic arrival seconds for ``workers`` (default: all), aligned
+        with the order given — the shape ``elastic_average_stacked``
+        expects. Staleness-as-lateness: a live worker 'arrives' as late as
+        its beacon is stale (so a straggling-but-alive worker can exceed
+        the elastic deadline and exercise the backoff), and a dead worker
+        arrives inf and is dropped from the average."""
+        stale = self.staleness(now)
+        if workers is None:
+            workers = range(self.n_workers)
+        out = []
+        for w in workers:
+            s = stale[int(w)]
+            out.append(s if s <= self.timeout_s else _INF)
+        return out
+
+
+def beat_on_chunk(writers: Sequence[HeartbeatWriter]):
+    """A ``run_phase`` chunk hook that beats every writer (in-process
+    deployments where one launcher drives all workers). Multi-process
+    deployments instead give each process its own writer and call
+    ``maybe_beat`` from their own loops."""
+    def hook(state, done):
+        step = int(np.asarray(state.step).reshape(-1)[0])
+        for w in writers:
+            w.maybe_beat(step=step)
+    return hook

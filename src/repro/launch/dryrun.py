@@ -494,7 +494,16 @@ def main():
                                   precision=args.precision,
                                   grad_accum_steps=args.grad_accum,
                                   phase2_engine=args.phase2_engine)
-                except Exception as e:  # noqa: BLE001
+                except (ValueError, TypeError, KeyError,
+                        NotImplementedError, RuntimeError) as e:
+                    # the failure modes a sweep tolerates and records:
+                    # config/shape validation (ValueError/TypeError/
+                    # KeyError), arch paths a lowering doesn't implement
+                    # (NotImplementedError), and XLA lowering/compile
+                    # failures (XlaRuntimeError subclasses RuntimeError).
+                    # Anything else — KeyboardInterrupt, MemoryError, a
+                    # genuine bug — aborts the sweep instead of being
+                    # silently filed as one more per-config error record.
                     rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
                            "status": "error", "error": f"{type(e).__name__}: {e}",
                            "trace": traceback.format_exc()[-2000:]}
@@ -506,6 +515,8 @@ def main():
                 if status == "ok":
                     extra = (f" compile={rec['compile_s']}s "
                              f"bottleneck={rec['bottleneck']}")
+                elif status == "error":
+                    extra = f" {rec['error']}"
                 print(f"[done] {key}: {status}{extra}", flush=True)
 
     n_ok = sum(1 for r in results.values() if r["status"] == "ok")

@@ -141,6 +141,7 @@ def follow(model: Model, cfg, params, args) -> dict:
         model, params, max_batch=args.batch, max_seq=max_seq,
         decode_block=args.decode_block, prefill_buckets=[args.prompt_len],
         kv_layout=args.kv_layout, page_size=args.page_size,
+        admit_timeout_s=args.admit_timeout or None,
         dist=args.dist if args.dist.mesh_shape else None)
     follower = PublishFollower(args.follow, template=params)
     upd = follower.poll()
@@ -231,6 +232,11 @@ def main():
                          "without a new generation")
     ap.add_argument("--decode-block", type=int, default=4,
                     help="fused decode steps per host call in --follow")
+    ap.add_argument("--admit-timeout", type=float, default=0.0,
+                    help="bound (seconds) on how long a request may wait "
+                         "for admission before being rejected instead of "
+                         "holding the queue on an exhausted page pool "
+                         "(0 = wait indefinitely)")
     add_dist_args(ap)
     args = ap.parse_args()
     args.dist = DistConfig.from_args(args)

@@ -29,6 +29,16 @@ resolved config for exact replay); multi-host launches pass
 loads only its shard of every phase-1 batch. --lost-workers simulates
 worker loss for the elastic phase-3 averaging drill (docs/training.md
 §Elastic averaging).
+
+Resilience (docs/resilience.md): --heartbeat-dir switches elastic
+arrivals from the simulated --lost-workers surface to REAL per-worker
+heartbeat beacons (this in-process launcher beats every live worker at
+each phase-2 chunk boundary; --lost-workers now marks workers that never
+beat, so the monitor — not a hand-fed timestamp — declares them dead).
+--supervise N wraps both phases in a PhaseSupervisor with an N-retry
+budget: divergence rolls back to the last verified checkpoint, and a
+worker whose beacon goes stale mid-phase-2 is dropped and the phase
+resumes with the survivors.
 """
 from __future__ import annotations
 
@@ -91,6 +101,11 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="continue from the newest snapshot in "
                          "--checkpoint-dir (bit-exact, mid-phase)")
+    ap.add_argument("--supervise", type=int, default=0, metavar="RETRIES",
+                    help="wrap both phases in a resilience.PhaseSupervisor "
+                         "with this retry budget (0 = unsupervised); "
+                         "divergence rolls back to the last verified "
+                         "checkpoint, stale-heartbeat workers are dropped")
     args = ap.parse_args()
     if args.resume and not args.checkpoint_dir:
         raise SystemExit("--resume requires --checkpoint-dir")
@@ -105,9 +120,31 @@ def main():
         raise SystemExit("--lost-workers needs --elastic-deadline > 0 "
                          "(a strict phase-3 barrier cannot drop workers)")
     worker_arrivals = None
-    if lost:
+    monitor = None
+    phase2_hooks = []
+    if dist.heartbeats:
+        # real liveness replaces the simulated-arrival path: every worker
+        # this launcher drives beats at each phase-2 chunk boundary, a
+        # --lost-workers worker simply never beats, and phase 3 reads
+        # arrival lateness off beacon staleness via the monitor
+        from repro.dist.heartbeat import (HeartbeatMonitor, HeartbeatWriter,
+                                          beat_on_chunk)
+        writers = [HeartbeatWriter(dist.heartbeat_dir, w,
+                                   interval_s=dist.heartbeat_interval_s)
+                   for w in range(dist.n_workers) if w not in lost]
+        for wtr in writers:
+            wtr.beat()                       # everyone alive at launch
+        monitor = HeartbeatMonitor(dist.heartbeat_dir, dist.n_workers,
+                                   timeout_s=dist.resolved_heartbeat_timeout)
+        phase2_hooks.append(beat_on_chunk(writers))
+    elif lost:
         worker_arrivals = [float("inf") if w in lost else 0.0
                            for w in range(dist.n_workers)]
+    supervisor = None
+    if args.supervise > 0:
+        from repro.resilience import PhaseSupervisor, SupervisorConfig
+        supervisor = PhaseSupervisor(
+            SupervisorConfig(max_retries=args.supervise), monitor=monitor)
 
     cfg = (registry.get_config(args.arch) if args.full
            else registry.get_smoke_config(args.arch))
@@ -149,7 +186,8 @@ def main():
         checkpoint_every=args.checkpoint_every)
 
     n_params = cfg.param_count()
-    swap = SWAP(adapter, swap_cfg, train, test_loader, dist=dist)
+    swap = SWAP(adapter, swap_cfg, train, test_loader, dist=dist,
+                supervisor=supervisor)
     print(f"arch={cfg.name} family={cfg.family} params={n_params/1e6:.1f}M "
           f"workers={dist.n_workers} "
           f"engine={dist.resolved_engine(swap.mesh)}"
@@ -157,7 +195,8 @@ def main():
              if dist.mesh_shape else ""))
     t0 = time.time()
     res = swap.run(jax.random.PRNGKey(args.seed), resume=args.resume,
-                   worker_arrivals=worker_arrivals)
+                   worker_arrivals=worker_arrivals,
+                   phase2_hooks=phase2_hooks, heartbeats=monitor)
     out = {k: v for k, v in res.items()
            if isinstance(v, (int, float, list)) and k != "phase1_log"}
     out["wall_s"] = time.time() - t0
@@ -168,6 +207,10 @@ def main():
         print(f"elastic: {res['phase2_live_workers']}/{dist.n_workers} "
               f"workers in the average, live mask "
               f"{res['worker_live_mask']}")
+    for ev in res.get("recovery_events", []):
+        print(f"recovery: {ev['kind']} in {ev['tag']} (attempt "
+              f"{ev['attempt']}) -> resumed from {ev['restored_from']} at "
+              f"step {ev['restored_step']}")
     print(f"SWAP: before avg {res['before_avg_test_acc']:.4f} -> "
           f"after avg {res['after_avg_test_acc']:.4f}")
     if args.save:

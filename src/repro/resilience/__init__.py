@@ -1,0 +1,31 @@
+"""Fault tolerance for the SWAP train→average→publish→serve loop.
+
+Layers (see docs/resilience.md):
+
+  * liveness      — ``repro.dist.heartbeat`` (file beacons → elastic
+                    arrivals + live masks);
+  * supervision   — ``PhaseSupervisor`` here: bounded retry + backoff
+                    around ``run_phase``, NaN/divergence rollback, and
+                    dead-worker recovery through the elastic shrink path;
+  * integrity     — checksummed checkpoint sidecars + verified fallback
+                    (``repro.checkpoint.state``);
+  * degradation   — serving admission deadlines + publish retry
+                    (``repro.serve``).
+
+Exercised end to end by ``repro.testing.faults`` /
+``tests/test_resilience.py``.
+"""
+from repro.resilience.supervisor import (DivergenceError, PhaseSupervisor,
+                                         RecoveryEvent, SupervisedResult,
+                                         SupervisorConfig, SupervisorError,
+                                         WorkerLostError)
+
+__all__ = [
+    "DivergenceError",
+    "PhaseSupervisor",
+    "RecoveryEvent",
+    "SupervisedResult",
+    "SupervisorConfig",
+    "SupervisorError",
+    "WorkerLostError",
+]

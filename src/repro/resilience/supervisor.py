@@ -1,0 +1,350 @@
+"""Supervised phase execution: bounded retry, divergence rollback, and
+dead-worker recovery for ``run_phase`` / ``SWAP.run``.
+
+State machine (per ``PhaseSupervisor.run_phase`` call)::
+
+    RUN ──ok──────────────────────────────▶ DONE
+     │
+     ├─ guard trips (nonfinite loss/EMA/params, loss above the
+     │  configured bar)                       → DivergenceError
+     ├─ liveness trips (a current worker's heartbeat went stale,
+     │  checked at every chunk boundary)      → WorkerLostError
+     ▼
+    attempt += 1 ── attempt > max_retries ──▶ FAIL (SupervisorError)
+     │
+     ▼
+    BACKOFF  sleep(backoff_s * factor**(attempt-1))   (injectable sleep)
+     ▼
+    RESTORE  newest *verified* checkpoint for the tag (else the phase's
+             initial state), minus any dead workers — a prefix loss goes
+             through the audited ``shrink_worker_axis`` path, a
+             mid-ensemble loss through ``take_worker_axis`` — then
+             re-placed on the mesh and re-RUN for the remaining steps.
+
+Why chunk boundaries are enough: the phase engine only surfaces state at
+compiled-chunk boundaries anyway (docs/training.md), so that is both the
+finest granularity at which damage is observable and the coarsest at
+which recovery must act. The guard runs BEFORE ``run_phase``'s hooks and
+checkpoint cadence for the chunk — a poisoned state is never snapshotted
+and never published.
+
+Divergence semantics: a retry replays from the restore point. Transient
+faults (the chaos suite's one-shot host-level injections, a flaky host)
+pass on replay; a *data-driven* divergence recurs deterministically and
+exhausts the retry budget — which is correct: retrying cannot fix a
+learning-rate explosion, and the SupervisorError says so.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.state import (checkpoint_workers, list_checkpoints,
+                                    load_train_state, state_step,
+                                    take_worker_axis, verify_snapshot)
+from repro.train.loop import as_hooks
+from repro.train.loop import run_phase as _run_phase
+
+
+class DivergenceError(RuntimeError):
+    """Nonfinite or exploding training signal detected at a chunk
+    boundary (loss, accuracy EMA, or parameters)."""
+
+
+class WorkerLostError(RuntimeError):
+    """One or more phase-2 workers stopped heartbeating mid-phase."""
+
+    def __init__(self, lost, msg: Optional[str] = None):
+        self.lost = sorted(int(w) for w in lost)
+        super().__init__(
+            msg or f"worker(s) {self.lost} stopped heartbeating")
+
+
+class SupervisorError(RuntimeError):
+    """The retry budget is spent (or no workers survive)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorConfig:
+    max_retries: int = 2          # recovery attempts per phase call
+    backoff_s: float = 0.0        # sleep before retry k: backoff_s*factor^(k-1)
+    backoff_factor: float = 2.0
+    max_loss: Optional[float] = None   # divergence bar; None = nonfinite only
+    check_params: bool = True     # jitted all-finite sweep over params
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.backoff_s < 0:
+            raise ValueError("backoff_s must be >= 0")
+        if self.backoff_factor < 1.0:
+            raise ValueError("backoff_factor must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryEvent:
+    """One recovery the supervisor performed (surfaced in SWAP results)."""
+    kind: str                     # "divergence" | "worker_lost"
+    attempt: int                  # 1-based recovery attempt number
+    tag: str                      # phase tag being supervised
+    error: str                    # the triggering error, stringified
+    restored_step: int            # step of the state resumed from
+    restored_from: str            # checkpoint path, or "initial state"
+    lost_workers: Tuple[int, ...] = ()
+
+
+class SupervisedResult(NamedTuple):
+    """`PhaseResult` plus what supervision did. ``steps``/``train_time``
+    accumulate across retries (work discarded by a rollback still
+    happened); ``worker`` is the possibly-shrunk worker index array the
+    phase finished with."""
+    state: Any
+    steps: int
+    train_time: float
+    hook_time: float
+    worker: Any
+    events: Tuple[RecoveryEvent, ...]
+
+
+class _Guard:
+    """Health checks on the state/metrics a compiled chunk surfaced."""
+
+    def __init__(self, cfg: SupervisorConfig):
+        self.cfg = cfg
+        self._finite_fn = None
+
+    def check(self, state, metrics: Dict[str, Any]) -> None:
+        loss = metrics.get("loss")
+        if loss is not None:
+            loss = np.asarray(loss)
+            ok = np.isfinite(loss)
+            if "skipped" in metrics:
+                # dynamic-loss-scale policies legitimately overflow and
+                # skip steps; only an overflow the scaler did NOT catch
+                # counts as divergence
+                ok = ok | (np.asarray(metrics["skipped"]) > 0)
+            if not ok.all():
+                raise DivergenceError(
+                    f"nonfinite loss in chunk ending at step "
+                    f"{state_step(state)}")
+            if self.cfg.max_loss is not None:
+                last = loss[..., -1]
+                if (last > self.cfg.max_loss).any():
+                    raise DivergenceError(
+                        f"loss {float(np.max(last)):.4g} above the "
+                        f"divergence bar {self.cfg.max_loss} at step "
+                        f"{state_step(state)}")
+        if not np.isfinite(np.asarray(state.acc_ema)).all():
+            raise DivergenceError(
+                f"nonfinite accuracy EMA at step {state_step(state)}")
+        if self.cfg.check_params and not self._params_finite(state):
+            raise DivergenceError(
+                f"nonfinite parameter(s) at step {state_step(state)}")
+
+    def _params_finite(self, state) -> bool:
+        if self._finite_fn is None:
+            def all_finite(params):
+                checks = [jnp.all(jnp.isfinite(leaf))
+                          for leaf in jax.tree_util.tree_leaves(params)
+                          if jnp.issubdtype(leaf.dtype, jnp.inexact)]
+                if not checks:
+                    return jnp.asarray(True)
+                return jnp.all(jnp.stack(checks))
+            # one jitted reduction, one scalar transfer per chunk
+            self._finite_fn = jax.jit(all_finite)
+        return bool(self._finite_fn(state.bundle["params"]))
+
+
+class _GuardedRunner:
+    """``run_chunk`` proxy: inner chunk → optional fault filter (the chaos
+    harness's injection point) → guard. Everything else (loader,
+    ensemble, ...) delegates to the wrapped runner."""
+
+    def __init__(self, runner, guard: _Guard,
+                 chunk_filter: Optional[Callable] = None):
+        self._runner = runner
+        self._guard = guard
+        self._filter = chunk_filter
+
+    def __getattr__(self, name):
+        return getattr(self._runner, name)
+
+    def run_chunk(self, state, worker, n_steps):
+        state, metrics = self._runner.run_chunk(state, worker, n_steps)
+        if self._filter is not None:
+            state, metrics = self._filter(state, metrics)
+        self._guard.check(state, metrics)
+        return state, metrics
+
+
+class PhaseSupervisor:
+    """Runs a training phase to completion through faults.
+
+    ``monitor`` is an optional ``repro.dist.heartbeat.HeartbeatMonitor``;
+    with one attached, every chunk boundary of an ensemble phase checks
+    the CURRENT workers' liveness and a stale worker triggers recovery.
+    ``sleep`` is injectable so tests assert the backoff schedule without
+    real waiting.
+    """
+
+    def __init__(self, cfg: Optional[SupervisorConfig] = None, *,
+                 monitor=None, sleep: Callable[[float], None] = time.sleep):
+        self.cfg = cfg or SupervisorConfig()
+        self.monitor = monitor
+        self._sleep = sleep
+
+    # ------------------------------------------------------------------
+
+    def run_phase(self, runner, state, worker, *, max_steps: int,
+                  tag: str, stop_accuracy=None, chunk_steps=None, log=None,
+                  checkpointer=None, checkpoint_meta=None, on_chunk=None,
+                  place: Optional[Callable] = None,
+                  chunk_filter: Optional[Callable] = None
+                  ) -> SupervisedResult:
+        """Drop-in for ``repro.train.loop.run_phase`` (same keywords) plus
+        ``place`` (re-shard a restored state/worker array onto the mesh,
+        e.g. ``SWAP._place_ensemble``) and ``chunk_filter`` (fault
+        injection seam, see ``repro.testing.faults``)."""
+        ensemble = bool(getattr(runner, "ensemble", False))
+        # the compiled chunk donates state buffers (DistConfig.donate_state),
+        # so the initial-state restore fallback — and the template an
+        # ensemble restore slices — must be HOST copies: the device arrays
+        # the caller handed in are dead after the first chunk runs
+        _host = lambda x: np.asarray(x) if isinstance(x, jax.Array) else x  # noqa: E731
+        init_state = jax.tree_util.tree_map(_host, state)
+        init_worker = jax.tree_util.tree_map(_host, worker)
+        if ensemble:
+            init_ids = [int(x) for x in np.asarray(worker).reshape(-1)]
+            ids = list(init_ids)
+            # worker-count era → the worker ids a snapshot of that width
+            # holds, so a restore of any era can map rows to identities
+            # (widths strictly shrink, so eras never collide)
+            eras: Dict[int, List[int]] = {len(init_ids): list(init_ids)}
+        else:
+            init_ids, ids, eras = None, None, {}
+
+        target = state_step(state) + max_steps
+        guard = _Guard(self.cfg)
+        events: List[RecoveryEvent] = []
+        attempt = 0
+        steps_total, train_total, hook_total = 0, 0.0, 0.0
+
+        while True:
+            hooks = list(as_hooks(on_chunk))
+            if ensemble and self.monitor is not None:
+                hooks.append(self._liveness_hook(ids))
+            guarded = _GuardedRunner(runner, guard, chunk_filter)
+            try:
+                res = _run_phase(
+                    guarded, state, worker,
+                    max_steps=max(target - state_step(state), 0),
+                    stop_accuracy=stop_accuracy, chunk_steps=chunk_steps,
+                    log=log, checkpointer=checkpointer, tag=tag,
+                    checkpoint_meta=checkpoint_meta, on_chunk=hooks)
+                return SupervisedResult(
+                    res.state, steps_total + res.steps,
+                    train_total + res.train_time,
+                    hook_total + res.hook_time, worker, tuple(events))
+            except (DivergenceError, WorkerLostError) as err:
+                attempt += 1
+                if attempt > self.cfg.max_retries:
+                    raise SupervisorError(
+                        f"phase {tag!r} failed after "
+                        f"{self.cfg.max_retries} recovery attempt(s): "
+                        f"{err}") from err
+                if isinstance(err, WorkerLostError):
+                    ids = [w for w in ids if w not in set(err.lost)]
+                    if not ids:
+                        raise SupervisorError(
+                            f"phase {tag!r}: no workers survive "
+                            f"({err})") from err
+                self._sleep(self.cfg.backoff_s
+                            * self.cfg.backoff_factor ** (attempt - 1))
+                state, worker, event = self._restore(
+                    err, attempt, tag, checkpointer, ensemble,
+                    init_state, init_worker, init_ids, ids, eras, place)
+                events.append(event)
+                warnings.warn(
+                    f"[supervisor] {event.kind} in phase {tag!r} "
+                    f"(attempt {attempt}/{self.cfg.max_retries}): {err} — "
+                    f"resuming from {event.restored_from} at step "
+                    f"{event.restored_step}", RuntimeWarning)
+
+    # ------------------------------------------------------------------
+
+    def _liveness_hook(self, ids: List[int]):
+        def hook(state, done):
+            dead = self.monitor.dead_among(ids)
+            if dead:
+                raise WorkerLostError(dead)
+        return hook
+
+    def _latest_good(self, checkpointer, tag: str) -> Optional[Dict]:
+        if checkpointer is None or not checkpointer.directory:
+            return None
+        mine = [c for c in list_checkpoints(checkpointer.directory)
+                if c["tag"] == tag]
+        for c in reversed(mine):
+            if verify_snapshot(c["path"], c["meta"]):
+                return c
+            warnings.warn(
+                f"[supervisor] skipping corrupt checkpoint {c['path']}",
+                RuntimeWarning)
+        return None
+
+    def _restore(self, err, attempt: int, tag: str, checkpointer,
+                 ensemble: bool, init_state, init_worker,
+                 init_ids: Optional[List[int]], live_ids: Optional[List[int]],
+                 eras: Dict[int, List[int]], place: Optional[Callable]):
+        entry = self._latest_good(checkpointer, tag)
+        if entry is None:
+            base_state, restored_from = init_state, "initial state"
+            base_ids = list(init_ids) if ensemble else None
+        else:
+            restored_from = entry["path"]
+            if ensemble:
+                n_ckpt = checkpoint_workers(entry["meta"]) or len(init_ids)
+                base_ids = eras.get(n_ckpt)
+                if base_ids is None:
+                    raise SupervisorError(
+                        f"checkpoint {entry['path']} holds {n_ckpt} "
+                        f"workers but no known worker-era matches") from err
+                # template sized to the snapshot's era: the initial stacked
+                # state minus the workers that era had already lost
+                template = init_state if base_ids == init_ids else \
+                    take_worker_axis(
+                        init_state, [init_ids.index(w) for w in base_ids])
+            else:
+                base_ids, template = None, init_state
+            base_state = load_train_state(entry["path"], template)
+
+        if ensemble:
+            keep = [i for i, w in enumerate(base_ids) if w in set(live_ids)]
+            if len(keep) != len(base_ids):
+                base_state = take_worker_axis(base_state, keep)
+            new_ids = [base_ids[i] for i in keep]
+            eras[len(new_ids)] = list(new_ids)
+            live_ids[:] = new_ids
+            worker = jnp.asarray(new_ids, jnp.int32)
+        else:
+            worker = init_worker
+
+        if place is not None:
+            base_state = place(base_state)
+            if ensemble:
+                worker = place(worker)
+
+        event = RecoveryEvent(
+            kind=("worker_lost" if isinstance(err, WorkerLostError)
+                  else "divergence"),
+            attempt=attempt, tag=tag, error=f"{type(err).__name__}: {err}",
+            restored_step=state_step(base_state),
+            restored_from=restored_from,
+            lost_workers=tuple(getattr(err, "lost", ())))
+        return base_state, worker, event

@@ -68,6 +68,7 @@ from __future__ import annotations
 from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -137,6 +138,16 @@ class CompiledServingEngine:
     ``kv_cache_dtype`` — overrides the model config's KV dtype (e.g.
     "int8") by rebuilding the Model on an updated config, so prefill,
     decode and the pool all quantize identically.
+
+    Degradation args: ``admit_timeout_s`` — engine-wide bound on how long
+    a request may wait for ADMISSION (a free slot + reservable pages);
+    a request still waiting past it is shed with ``rejected=True`` /
+    ``done=True`` and counted in ``stats["rejections"]``, instead of
+    parking the FIFO head on an exhausted page pool forever. Per-request
+    ``Request.deadline_s`` overrides it; None everywhere keeps the legacy
+    wait-indefinitely behavior. ``clock`` is injectable (chaos tests use
+    a fake clock; deadlines never sleep — they are checked at submit/step
+    boundaries).
     """
 
     def __init__(self, model: Model, params, *, max_batch: int = 4,
@@ -147,7 +158,8 @@ class CompiledServingEngine:
                  kv_layout: str = "auto", page_size: int = 16,
                  n_pages: Optional[int] = None,
                  kv_cache_dtype: Optional[str] = None,
-                 dist=None):
+                 dist=None, admit_timeout_s: Optional[float] = None,
+                 clock=time.monotonic):
         if sample not in ("greedy", "categorical"):
             raise ValueError(f"unknown sample mode {sample!r}")
         if kv_layout not in ("auto", "paged", "dense"):
@@ -162,6 +174,12 @@ class CompiledServingEngine:
         # by param_spec rules, decode state (cache + slot vectors) by
         # decode_state_shardings — slots and pool pages on `data`. None
         # (the default) keeps the single-device layout.
+        if admit_timeout_s is not None and admit_timeout_s <= 0:
+            raise ValueError(
+                f"admit_timeout_s must be positive (None = no bound), "
+                f"got {admit_timeout_s}")
+        self.admit_timeout_s = admit_timeout_s
+        self._clock = clock
         self.dist = dist
         self.mesh = dist.make_mesh() if dist is not None else None
         if self.mesh is not None:
@@ -239,7 +257,7 @@ class CompiledServingEngine:
             "decode_calls": 0, "decode_transfers": 0, "decode_steps": 0,
             "admissions": 0, "admit_transfers": 0, "prefill_compiles": 0,
             "publishes": 0, "publish_swaps": 0, "publish_superseded": 0,
-            "dual_decode_calls": 0, "admit_page_waits": 0,
+            "dual_decode_calls": 0, "admit_page_waits": 0, "rejections": 0,
         }
         cache_len = self._cache_len
         self._prefill_fn = jax.jit(
@@ -517,8 +535,35 @@ class CompiledServingEngine:
                     f"request needs {full} pages but the pool only has "
                     f"{self.n_pages - 1} allocatable (n_pages={self.n_pages},"
                     f" page_size={self.page_size})")
+        request.submit_t = float(self._clock())
         self.waiting.append(request)
         self._admit()
+
+    def _admit_deadline(self, req: Request) -> Optional[float]:
+        d = req.deadline_s if req.deadline_s is not None \
+            else self.admit_timeout_s
+        if d is None:
+            return None
+        return (req.submit_t or 0.0) + d
+
+    def _shed_expired(self) -> None:
+        """Reject waiting requests whose admission deadline has passed —
+        bounded head-of-line blocking: a request the pool cannot admit in
+        time is shed explicitly (rejected=True) so the queue behind it
+        keeps moving and callers never wait forever."""
+        if not self.waiting:
+            return
+        now = float(self._clock())
+        kept = []
+        for req in self.waiting:
+            deadline = self._admit_deadline(req)
+            if deadline is not None and now > deadline:
+                req.rejected = True
+                req.done = True
+                self.stats["rejections"] += 1
+            else:
+                kept.append(req)
+        self.waiting = kept
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -530,6 +575,7 @@ class CompiledServingEngine:
         # publish is retried each iteration too, so a request admitted
         # after the blocking slot freed picks up the newest generation
         self._apply_pending()
+        self._shed_expired()
         while self.waiting:
             self._apply_pending()
             free = self._free_slots()

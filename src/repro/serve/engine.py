@@ -45,6 +45,15 @@ class Request:
     # with live publishing; None on the per-step oracle, which serves one
     # static param set)
     generation: Optional[int] = None
+    # admission deadline (compiled engine): seconds from submit within
+    # which the request must be ADMITTED, else it is shed with
+    # rejected=True / done=True instead of holding the head of the queue
+    # on an exhausted page pool. None defers to the engine-level
+    # admit_timeout_s (None there = wait indefinitely, the legacy
+    # behavior). submit_t is stamped by the engine's clock at submit().
+    deadline_s: Optional[float] = None
+    submit_t: Optional[float] = None
+    rejected: bool = False
 
 
 class ServingEngine:

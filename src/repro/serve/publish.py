@@ -28,12 +28,19 @@ across swaps.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+import time
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.checkpoint.state import (
     find_latest_publish, load_publish, save_publish, state_step,
 )
 from repro.core.averaging import StreamingAverage, average_stacked
+
+# the transient failure modes a publish retry can actually fix: I/O
+# hiccups on the snapshot dir, an engine's delivery raising. Programming
+# errors (TypeError, bad trees) are not retried.
+_RETRYABLE = (OSError, RuntimeError, ValueError)
 
 
 class WeightPublisher:
@@ -49,22 +56,47 @@ class WeightPublisher:
 
     Use ``publisher.on_epoch`` as a ``run_phase``/``SWAP.run`` hook, or
     call ``publish(params)`` directly with an already-averaged tree.
+
+    Delivery resilience: ``max_retries`` re-attempts a failed publish
+    (snapshot write or engine delivery raising) with exponential backoff
+    (``retry_backoff_s * 2**k``, via an injectable ``sleep``). After the
+    budget, ``on_failure`` decides: ``"raise"`` (default — the failure
+    propagates exactly as without retries, and the generation counter
+    never advanced) or ``"skip"`` (record in ``self.failures``, warn, and
+    return the current generation — training proceeds and the NEXT epoch
+    boundary publishes a fresher average anyway, so one lost delivery
+    costs staleness, not the run).
     """
 
     def __init__(self, engines=(), *, directory: Optional[str] = None,
-                 ensemble: bool = True, every: int = 1, impl: str = "auto"):
+                 ensemble: bool = True, every: int = 1, impl: str = "auto",
+                 max_retries: int = 0, retry_backoff_s: float = 0.05,
+                 on_failure: str = "raise",
+                 sleep: Callable[[float], None] = time.sleep):
         if not engines and not directory:
             raise ValueError(
                 "WeightPublisher needs somewhere to publish: pass live "
                 "engines, a snapshot directory, or both")
+        if on_failure not in ("raise", "skip"):
+            raise ValueError(f"on_failure must be 'raise' or 'skip', "
+                             f"got {on_failure!r}")
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if retry_backoff_s < 0:
+            raise ValueError("retry_backoff_s must be >= 0")
         self.engines: List[Any] = list(engines)
         self.directory = directory
         self.ensemble = ensemble
         self.every = max(1, every)
         self.average = StreamingAverage(impl=impl)
         self.generation = 0
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.on_failure = on_failure
+        self._sleep = sleep
         self._boundaries = 0
         self.log: List[Dict[str, int]] = []   # [{generation, step, folds}]
+        self.failures: List[Dict[str, Any]] = []   # skipped publishes
 
     def attach(self, engine) -> None:
         """Add a live engine; it receives generations published later."""
@@ -96,11 +128,37 @@ class WeightPublisher:
 
         The generation counter and log only advance once the publish
         actually lands somewhere: a ``save_publish`` failure propagates
-        without consuming a generation number, and if every attached
-        engine rejects the generation as stale (``publish`` -> None) the
-        counter rolls back too — otherwise a flaky snapshot dir or a
-        restarted publisher racing a fresher one would burn generations
-        and log publishes that never happened."""
+        (after the retry budget) without consuming a generation number,
+        and if every attached engine rejects the generation as stale
+        (``publish`` -> None) the counter rolls back too — otherwise a
+        flaky snapshot dir or a restarted publisher racing a fresher one
+        would burn generations and log publishes that never happened.
+
+        Retries re-run the whole attempt (snapshot + delivery) under the
+        SAME generation number — ``save_publish`` is an atomic overwrite,
+        so a half-delivered retry can never fork generation history."""
+        attempt = 0
+        while True:
+            try:
+                return self._publish_once(params, step)
+            except _RETRYABLE as err:
+                attempt += 1
+                if attempt <= self.max_retries:
+                    self._sleep(self.retry_backoff_s * 2 ** (attempt - 1))
+                    continue
+                if self.on_failure == "raise":
+                    raise
+                self.failures.append(
+                    {"step": step, "attempts": attempt,
+                     "error": f"{type(err).__name__}: {err}"})
+                warnings.warn(
+                    f"publish at step {step} failed after {attempt} "
+                    f"attempt(s) ({err}); skipping — the next epoch "
+                    f"boundary publishes a fresher average",
+                    RuntimeWarning)
+                return self.generation
+
+    def _publish_once(self, params, step: int) -> int:
         gen = self.generation + 1
         if self.directory:
             save_publish(self.directory, gen, step, params,

@@ -1,0 +1,236 @@
+"""Deterministic fault injection for the resilience subsystem.
+
+The chaos harness behind ``tests/test_resilience.py``: every fault the
+train→average→publish→serve pipeline must survive is *scripted* here —
+worker death at a chosen step, straggler delay, checkpoint byte
+corruption, a NaN-loss step, failed publish delivery — and driven by a
+``FakeClock`` instead of wall time, so a chaos run is bit-reproducible
+and never uses a sleep as synchronization.
+
+Injection seams (all pre-existing production surfaces, no test-only
+hooks in the trained path):
+
+  * ``FaultPlan.chunk_filter`` — ``PhaseSupervisor.run_phase``'s
+    ``chunk_filter`` argument; poisons the state a compiled chunk
+    surfaced, exactly where out-of-band damage would appear.
+  * ``FaultPlan.beat_hook`` — a phase-2 ``on_chunk`` hook: beats every
+    scripted-alive worker's ``HeartbeatWriter`` and goes silent for a
+    killed one, so the ``HeartbeatMonitor`` (sharing the plan's clock)
+    declares death from real beacon staleness.
+  * ``corrupt_latest_checkpoint`` — flips or truncates bytes of the
+    newest snapshot on disk, the out-of-band damage ``verify_snapshot``
+    exists to catch.
+  * ``FaultPlan.failing_engine`` — a serving-engine stand-in whose
+    ``publish`` raises for the first N deliveries, exercising
+    ``WeightPublisher``'s retry/skip budget.
+
+NaN injection is one-shot and host-level by design: an in-trace fault
+would recur identically on the supervisor's deterministic replay and
+(correctly) exhaust the retry budget — the transient-fault story needs
+damage that does NOT survive a rollback.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.state import _TAG_ORDER, list_checkpoints
+
+
+class FakeClock:
+    """A callable monotonic clock the test script advances by hand.
+
+    Drop-in for ``time.monotonic`` everywhere a clock is injectable
+    (``HeartbeatWriter``/``HeartbeatMonitor``, ``CompiledServingEngine``,
+    ``FaultPlan``)."""
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"a monotonic clock cannot rewind ({dt})")
+        self.t += float(dt)
+        return self.t
+
+
+class FaultPlan:
+    """A scripted schedule of faults, built fluently::
+
+        plan = (FaultPlan()
+                .kill_worker(2, at_step=4)     # beacon goes silent
+                .delay_worker(1, by_s=5.0)     # straggler arrival
+                .nan_at_step(6)                # one-shot state poison
+                .fail_publishes(2))            # first 2 deliveries raise
+
+    All faults are inert until their seam fires, so one plan can carry
+    the full chaos scenario for a run.
+    """
+
+    def __init__(self, clock: Optional[FakeClock] = None):
+        self.clock = clock if clock is not None else FakeClock()
+        self.deaths: Dict[int, int] = {}      # worker id -> death step
+        self.delays: Dict[int, float] = {}    # worker id -> arrival delay s
+        self.nan_step: Optional[int] = None
+        self.publish_failures = 0
+        self._nan_fired = False
+        self._publish_attempts = 0
+
+    # -- builders -------------------------------------------------------
+
+    def kill_worker(self, worker: int, at_step: int) -> "FaultPlan":
+        """Worker ``worker`` stops heartbeating once its step reaches
+        ``at_step`` (death observed at the next chunk boundary)."""
+        self.deaths[int(worker)] = int(at_step)
+        return self
+
+    def delay_worker(self, worker: int, by_s: float) -> "FaultPlan":
+        """Worker ``worker`` reports ``by_s`` seconds late to phase-3
+        averaging (alive, just straggling)."""
+        self.delays[int(worker)] = float(by_s)
+        return self
+
+    def nan_at_step(self, step: int) -> "FaultPlan":
+        """Poison the surfaced parameters with NaN at the first chunk
+        boundary whose step is >= ``step`` (once — a transient fault)."""
+        self.nan_step = int(step)
+        return self
+
+    def fail_publishes(self, n: int = 1) -> "FaultPlan":
+        """The first ``n`` publish deliveries to ``failing_engine`` raise."""
+        self.publish_failures = int(n)
+        return self
+
+    # -- seam: supervisor chunk_filter ----------------------------------
+
+    def chunk_filter(self, state, metrics):
+        """``PhaseSupervisor.run_phase(chunk_filter=...)`` seam: one-shot
+        NaN poison of every inexact param leaf. Host-level, so the
+        supervisor's rollback-and-replay runs clean — exactly a transient
+        hardware/numerics fault, not a deterministic divergence."""
+        if self.nan_step is None or self._nan_fired:
+            return state, metrics
+        step = int(np.asarray(state.step).reshape(-1)[0])
+        if step < self.nan_step:
+            return state, metrics
+        self._nan_fired = True
+
+        def poison(leaf):
+            a = jnp.asarray(leaf)
+            if jnp.issubdtype(a.dtype, jnp.inexact):
+                return jnp.full_like(a, jnp.nan)
+            return a
+
+        params = jax.tree_util.tree_map(poison, state.bundle["params"])
+        return state._replace(bundle=dict(state.bundle,
+                                          params=params)), metrics
+
+    # -- seam: phase-2 chunk hook (heartbeats) --------------------------
+
+    def beat_hook(self, writers: Sequence[Any], chunk_wall_s: float = 1.0):
+        """An ``on_chunk`` hook that advances the plan's clock by
+        ``chunk_wall_s`` per chunk and beats every writer whose worker is
+        still scripted alive — a killed worker's beacon simply stops, and
+        the monitor (sharing ``self.clock``) times it out for real."""
+        def hook(state, done):
+            self.clock.advance(chunk_wall_s)
+            step = int(np.asarray(state.step).reshape(-1)[0])
+            for w in writers:
+                death = self.deaths.get(w.worker)
+                if death is not None and step >= death:
+                    continue
+                w.maybe_beat(step=step)
+        return hook
+
+    # -- seam: phase-3 simulated arrivals -------------------------------
+
+    def apply_delays(self, arrivals: Sequence[float],
+                     worker_ids: Optional[Sequence[int]] = None
+                     ) -> List[float]:
+        """Add scripted straggler delays to an arrivals list (aligned with
+        ``worker_ids``, default 0..n-1) — the simulated-arrival analogue
+        of a slow-but-alive worker's stale beacon."""
+        ids = (list(range(len(arrivals))) if worker_ids is None
+               else [int(w) for w in worker_ids])
+        return [a + self.delays.get(w, 0.0) for a, w in zip(arrivals, ids)]
+
+    # -- seam: publish delivery -----------------------------------------
+
+    def failing_engine(self, inner: Optional[Any] = None) -> "FlakyEngine":
+        """A serving-engine stand-in bound to this plan's failure budget."""
+        return FlakyEngine(self, inner)
+
+
+class FlakyEngine:
+    """Quacks like ``CompiledServingEngine`` for ``WeightPublisher``:
+    ``publish`` raises for the plan's first ``publish_failures``
+    deliveries, then delegates to ``inner`` (or accepts outright)."""
+
+    def __init__(self, plan: FaultPlan, inner: Optional[Any] = None):
+        self.plan = plan
+        self.inner = inner
+        self.delivered: List[int] = []        # generations that landed
+
+    def publish(self, params, generation: int):
+        self.plan._publish_attempts += 1
+        if self.plan._publish_attempts <= self.plan.publish_failures:
+            raise RuntimeError(
+                f"injected publish failure "
+                f"{self.plan._publish_attempts}/{self.plan.publish_failures}")
+        if self.inner is not None:
+            out = self.inner.publish(params, generation=generation)
+        else:
+            out = True
+        if out is not None:
+            self.delivered.append(int(generation))
+        return out
+
+
+def corrupt_latest_checkpoint(directory: str, tag: Optional[str] = None,
+                              mode: str = "flip") -> str:
+    """Damage the newest snapshot on disk (highest resume priority, then
+    step — the one ``find_resume_point`` would pick if it verified).
+
+    ``mode="flip"`` xors one mid-file byte (bit rot: the payload still
+    unpacks, only the checksum catches it); ``mode="truncate"`` halves the
+    file (torn copy: even the legacy payload check catches it). Returns
+    the damaged path."""
+    ckpts = [c for c in list_checkpoints(directory)
+             if tag is None or c["tag"] == tag]
+    if not ckpts:
+        raise ValueError(f"no checkpoints in {directory!r} to corrupt")
+    victim = max(ckpts, key=lambda c: (_TAG_ORDER[c["tag"]], c["step"]))
+    path = victim["path"]
+    with open(path, "rb") as f:
+        data = bytearray(f.read())
+    if mode == "flip":
+        mid = len(data) // 2
+        data[mid] ^= 0xFF
+    elif mode == "truncate":
+        data = data[:len(data) // 2]
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    with open(path, "wb") as f:
+        f.write(bytes(data))
+    return path
+
+
+def truncate_sidecar(path: str, keep_bytes: int = 10) -> str:
+    """Truncate a snapshot's JSON sidecar mid-object (the mid-write-kill /
+    disk-damage case ``read_meta`` must survive). Returns the sidecar
+    path."""
+    sidecar = path + ".json"
+    with open(sidecar, "rb") as f:
+        data = f.read()
+    if not os.path.getsize(sidecar) > keep_bytes:
+        raise ValueError(f"sidecar {sidecar} too small to truncate")
+    with open(sidecar, "wb") as f:
+        f.write(data[:keep_bytes])
+    return sidecar

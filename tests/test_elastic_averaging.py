@@ -78,6 +78,44 @@ def test_backoff_extends_deadline_while_quorum_short():
     assert mask.tolist() == [True, True]
 
 
+def test_late_report_after_quorum_met_does_not_extend_deadline():
+    """Extensions exist to reach quorum, not to rescue stragglers: once
+    min_workers reported, a late report must neither fold nor consume a
+    deadline extension."""
+    ea = ElasticAverage(3, deadline_s=5.0, backoff=2.0, max_extensions=2,
+                        min_workers=2)
+    avg, mask = ea.collect([(0, _params(1.0), 1.0), (1, _params(3.0), 2.0),
+                            (2, _params(99.0), 50.0)])
+    assert ea.extensions_used == 0           # quorum was met — no backoff
+    assert ea.deadline == 5.0
+    assert mask.tolist() == [True, True, False]
+    _assert_close(avg, _params(2.0))
+    assert ea.stragglers == [(2, 50.0)]
+
+
+def test_exact_deadline_arrival_folds():
+    """An arrival exactly AT the deadline is on time (the gate is
+    ``arrival > deadline``), so boundary reports are never dropped by a
+    strict-inequality off-by-one."""
+    ea = ElasticAverage(2, deadline_s=5.0)
+    assert ea.submit(0, _params(1.0), 5.0)
+    avg, mask = ea.value()
+    assert mask.tolist() == [True, False]
+    _assert_close(avg, _params(1.0))
+
+
+def test_all_workers_late_error_reports_extension_count():
+    """When every worker blows even the fully backed-off deadline, the
+    error must say how far the deadline was extended — the operator's
+    first question is whether backoff was exhausted or never configured."""
+    ea = ElasticAverage(2, deadline_s=1.0, backoff=2.0, max_extensions=2,
+                        min_workers=2)
+    with pytest.raises(ElasticAverageError,
+                       match=r"0/2 workers after 2 deadline extension"):
+        ea.collect([(0, _params(1.0), 99.0), (1, _params(2.0), 99.0)])
+    assert ea.extensions_used == 2           # the full budget was spent
+
+
 def test_all_late_raises():
     ea = ElasticAverage(2, deadline_s=1.0, backoff=2.0, max_extensions=1,
                         min_workers=1)
